@@ -1,0 +1,28 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (one row per measured point).
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks.paper_figs import ALL_FIGS
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for fig in ALL_FIGS:
+        try:
+            for name, us, derived in fig():
+                print(f"{name},{us},{derived}")
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{fig.__name__},0,ERROR:{type(e).__name__}:{e}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

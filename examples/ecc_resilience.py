@@ -1,0 +1,58 @@
+"""Fig-10 style study: model-output fidelity vs NAND bit-error rate, with and
+without the on-die outlier ECC, on a real (reduced) transformer.
+
+Run:  PYTHONPATH=src python examples/ecc_resilience.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_arch
+from repro.core import ecc
+from repro.models import model as model_lib
+from repro.quant.convert import quantize_params
+
+cfg = get_arch("smollm-360m").reduced()
+key = jax.random.PRNGKey(0)
+params = model_lib.init_params(cfg, key, dtype=jnp.float32, max_seq=64)
+qparams = quantize_params(params)
+toks = jax.random.randint(key, (4, 24), 0, cfg.vocab_size)
+clean_logits = model_lib.forward(qparams, cfg, toks, {})
+clean_top1 = jnp.argmax(clean_logits, -1)
+
+
+def corrupt_tree(tree, ber, k, with_ecc):
+    """Bit-flip every int8 weight; optionally protect each 16K page with ECC."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        if getattr(leaf, "dtype", None) == jnp.int8:
+            k = jax.random.fold_in(k, hash(str(path)) % 2**30)
+            flat_w = jax.lax.bitcast_convert_type(leaf.reshape(-1), jnp.uint8)
+            pad = (-flat_w.shape[0]) % ecc.PAGE_ELEMS
+            pages = jnp.pad(flat_w, (0, pad)).reshape(-1, ecc.PAGE_ELEMS)
+            code = ecc.encode_pages(pages) if with_ecc else None
+            noisy = ecc.inject_bitflips(pages, ber, k)
+            if with_ecc:
+                code = ecc.inject_ecc_bitflips(code, ber,
+                                               jax.random.fold_in(k, 1))
+                noisy = ecc.decode_pages(noisy, code)
+            w = jax.lax.bitcast_convert_type(
+                noisy.reshape(-1)[:flat_w.shape[0]], jnp.int8)
+            out.append(w.reshape(leaf.shape))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, [o for o in out])
+
+
+print(f"{'BER':>8} | {'top1 agree (ECC)':>17} | {'top1 agree (raw)':>17}")
+for ber in (1e-5, 1e-4, 2e-4, 8e-4, 2e-3):
+    k = jax.random.fold_in(key, int(ber * 1e7))
+    agree = {}
+    for with_ecc in (True, False):
+        noisy = corrupt_tree(qparams, ber, k, with_ecc)
+        logits = model_lib.forward(noisy, cfg, toks, {})
+        agree[with_ecc] = float((jnp.argmax(logits, -1) == clean_top1).mean())
+    print(f"{ber:8.0e} | {agree[True]:16.1%} | {agree[False]:16.1%}")
+print("\n(paper Fig. 10: ECC holds 92-95% accuracy at 2e-4 where the "
+      "unprotected model collapses)")

@@ -1,0 +1,58 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import dataclasses
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_arch
+from repro.configs.base import SHAPES
+from repro.distributed import ctx as dctx
+from repro.distributed import sharding as shd
+from repro.launch.dryrun import act_constraint, build_step
+from repro.launch.mesh import make_production_mesh
+from repro.launch import specs as specs_lib
+from repro.models import model as model_lib
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+mesh = make_production_mesh()
+shape = SHAPES["train_4k"]
+base = get_arch("command-r-plus-104b")
+
+
+def measure(tag, cfg, kind="train", microbatches=8, grad_only=False,
+            no_head=False):
+    with dctx.lowering_ctx(constrain=act_constraint(mesh), remat=True,
+                           mesh=mesh):
+        with mesh:
+            if not grad_only and not no_head:
+                jf, argspecs = build_step(cfg, shape, mesh, microbatches)
+            else:
+                pspecs = specs_lib.param_specs(cfg, max_seq=4096, quant=False)
+                pshard = shd.params_shardings(pspecs, mesh)
+                tok_shard = NamedSharding(mesh, shd.batch_pspec(mesh, 256, 2))
+                toks = jax.ShapeDtypeStruct((256, 4096), jnp.int32)
+
+                def lfn(params, tokens):
+                    logits = model_lib.forward(params, cfg, tokens, None)
+                    if no_head:
+                        return logits.astype(jnp.float32).sum()
+                    lse = jax.nn.logsumexp(logits.astype(jnp.float32), -1)
+                    return lse.mean()
+
+                def fn(params, tokens):
+                    return jax.grad(lfn)(params, tokens)
+
+                jf = jax.jit(fn, in_shardings=(pshard, tok_shard),
+                             donate_argnums=())
+                argspecs = (pspecs, toks)
+            comp = jf.lower(*argspecs).compile()
+    mem = comp.memory_analysis()
+    print(f"{tag:32s} temp={mem.temp_size_in_bytes/1e9:7.2f}GB "
+          f"args={mem.argument_size_in_bytes/1e9:6.2f}GB", flush=True)
+
+
+measure("full(mb8)", base)
+measure("grad-only (no adam, mb1)", base, grad_only=True)
+measure("grad-only, sum-loss (no lse)", base, no_head=True, grad_only=True)
+measure("8 layers full", dataclasses.replace(base, n_layers=8))
+measure("untied full", dataclasses.replace(base, tie_embeddings=False))

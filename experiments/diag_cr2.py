@@ -1,0 +1,54 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import dataclasses
+import re
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_arch
+from repro.distributed import ctx as dctx
+from repro.distributed import sharding as shd
+from repro.launch.dryrun import act_constraint
+from repro.launch.mesh import make_production_mesh
+from repro.launch import specs as specs_lib
+from repro.models import model as model_lib
+from jax.sharding import NamedSharding
+
+mesh = make_production_mesh()
+cfg = dataclasses.replace(get_arch("command-r-plus-104b"), n_layers=1)
+
+with dctx.lowering_ctx(constrain=act_constraint(mesh), remat=True, mesh=mesh):
+    with mesh:
+        pspecs = specs_lib.param_specs(cfg, max_seq=4096, quant=False)
+        pshard = shd.params_shardings(pspecs, mesh)
+        tok_shard = NamedSharding(mesh, shd.batch_pspec(mesh, 256, 2))
+        toks = jax.ShapeDtypeStruct((256, 4096), jnp.int32)
+
+        def lfn(params, tokens):
+            logits = model_lib.forward(params, cfg, tokens, None)
+            lse = jax.nn.logsumexp(logits.astype(jnp.float32), -1)
+            return lse.mean()
+
+        jf = jax.jit(lambda p, t: jax.grad(lfn)(p, t),
+                     in_shardings=(pshard, tok_shard))
+        comp = jf.lower(pspecs, toks).compile()
+
+mem = comp.memory_analysis()
+print(f"temp={mem.temp_size_in_bytes/1e9:.2f}GB")
+text = comp.as_text()
+DT = {"f32": 4, "bf16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1, "pred": 1,
+      "f16": 2, "u16": 2, "s16": 2, "f64": 8, "s64": 8, "u64": 8}
+sizes = {}
+for m in re.finditer(r"= (\w+)\[([\d,]+)\]", text):
+    dt, dims = m.group(1), m.group(2)
+    if dt not in DT:
+        continue
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    key = f"{dt}[{dims}]"
+    b = n * DT[dt]
+    if b > 100e6:
+        sizes[key] = (b, sizes.get(key, (0, 0))[1] + 1)
+for k, (b, c) in sorted(sizes.items(), key=lambda kv: -kv[1][0])[:15]:
+    print(f"{b/1e9:8.2f}GB x{c:3d}  {k}")

@@ -1,0 +1,162 @@
+"""Config system: architecture + input-shape descriptions.
+
+``ModelConfig`` is the single source of truth consumed by models/, the
+Cambricon-LLM planner (core/planner.py), the simulator (sim/llm_perf.py), the
+sharding rules (distributed/sharding.py) and the dry-run launcher.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | mla_moe | vlm | audio | hybrid | ssm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 0  # 0 -> d_model // n_heads
+
+    # --- positional / structural flags ---
+    rope_theta: float = 1.0e4
+    rope_fraction: float = 1.0  # chatglm3 "2d rope": rotary on half the head dim
+    rope_mode: str = "standard"  # standard | mrope | learned | none
+    tie_embeddings: bool = False
+    parallel_block: bool = False  # command-r: attn and FFN in parallel
+    use_bias: bool = False
+    gated_ffn: bool = True  # SwiGLU-style; False -> 2-matrix GELU/ReLU MLP (OPT, whisper)
+    norm: str = "rms"  # "rms" | "ln"
+    norm_eps: float = 1e-5
+
+    # --- MoE ---
+    n_experts: int = 0          # routed experts
+    n_shared_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0           # per-expert FFN width
+    first_k_dense: int = 0      # leading dense layers (deepseek)
+    dense_d_ff: int = 0         # width of those dense layers
+
+    # --- MLA (deepseek) ---
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+
+    # --- SSM (mamba2 / zamba2) ---
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_ngroups: int = 1
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+
+    # --- hybrid (zamba2) ---
+    shared_attn_every: int = 0  # apply the shared attention block every k layers
+
+    # --- encoder-decoder (whisper) ---
+    is_encoder_decoder: bool = False
+    n_encoder_layers: int = 0
+    encoder_seq: int = 1500  # stub frontend: precomputed frame embeddings
+
+    # --- vlm (qwen2-vl) ---
+    n_vision_tokens: int = 0  # stub frontend: precomputed patch embeddings
+
+    sub_quadratic: bool = False  # supports long_500k decode
+
+    def __post_init__(self):
+        if self.d_head == 0 and self.n_heads:
+            object.__setattr__(self, "d_head", self.d_model // self.n_heads)
+
+    # ------------------------------------------------------------------
+    @property
+    def d_inner(self) -> int:
+        """SSM inner width."""
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_nheads(self) -> int:
+        return self.d_inner // self.ssm_headdim if self.ssm_headdim else 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    # ------------------------------------------------------------------
+    def param_count(self) -> int:
+        """Analytic parameter count (embedding + blocks + head)."""
+        from repro.core.planner import model_matrices
+
+        total = 0
+        for m in model_matrices(self):
+            total += m.h * m.w * m.count
+        # norms + small vectors are negligible but add d_model per layer-ish
+        total += 2 * self.n_layers * self.d_model
+        return total
+
+    def active_param_count(self) -> int:
+        from repro.core.planner import model_matrices
+
+        total = 0
+        for m in model_matrices(self):
+            total += m.h * m.w * (m.count if not m.is_expert else m.active_count)
+        return total
+
+    # ------------------------------------------------------------------
+    def reduced(self) -> "ModelConfig":
+        """Smoke-test configuration of the same family (runs on 1 CPU)."""
+        scale = {
+            "n_layers": min(self.n_layers, 2),
+            "d_model": 64,
+            "n_heads": 4,
+            "n_kv_heads": min(max(self.n_kv_heads, 1), 2) if self.n_heads else 0,
+            "d_head": 16,
+            "d_ff": 128,
+            "vocab_size": 256,
+        }
+        extra = {}
+        if self.n_experts:
+            extra.update(n_experts=8, top_k=min(self.top_k, 2), moe_d_ff=32,
+                         n_shared_experts=min(self.n_shared_experts, 1))
+        if self.first_k_dense:
+            extra.update(first_k_dense=1, dense_d_ff=128)
+        if self.kv_lora_rank:
+            extra.update(kv_lora_rank=32, qk_nope_dim=16, qk_rope_dim=8, v_head_dim=16)
+        if self.ssm_state:
+            extra.update(ssm_state=16, ssm_headdim=16, ssm_ngroups=1)
+        if self.shared_attn_every:
+            extra.update(shared_attn_every=2, n_layers=5)
+        if self.is_encoder_decoder:
+            extra.update(n_encoder_layers=2, encoder_seq=16)
+        if self.n_vision_tokens:
+            extra.update(n_vision_tokens=8)
+        return dataclasses.replace(self, name=self.name + "-reduced", **{**scale, **extra})
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = InputShape("train_4k", 4096, 256, "train")
+PREFILL_32K = InputShape("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = InputShape("decode_32k", 32768, 128, "decode")
+LONG_500K = InputShape("long_500k", 524288, 1, "decode")
+
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+SHAPES = {s.name: s for s in ALL_SHAPES}
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """(runnable, reason-if-skipped) per the assignment's skip rules."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("pure full-attention arch: 500k-token decode needs "
+                       "sub-quadratic attention (run only for ssm/hybrid)")
+    return True, ""

@@ -1,0 +1,62 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher."""
+
+from __future__ import annotations
+
+from repro.configs.base import (ALL_SHAPES, SHAPES, InputShape, ModelConfig,
+                                shape_applicable)
+from repro.configs.chatglm3_6b import CONFIG as CHATGLM3_6B
+from repro.configs.command_r_plus_104b import CONFIG as COMMAND_R_PLUS_104B
+from repro.configs.deepseek_v2_lite_16b import CONFIG as DEEPSEEK_V2_LITE_16B
+from repro.configs.internlm2_20b import CONFIG as INTERNLM2_20B
+from repro.configs.mamba2_130m import CONFIG as MAMBA2_130M
+from repro.configs.paper_models import PAPER_MODELS
+from repro.configs.qwen2_moe_a2_7b import CONFIG as QWEN2_MOE_A2_7B
+from repro.configs.qwen2_vl_72b import CONFIG as QWEN2_VL_72B
+from repro.configs.smollm_360m import CONFIG as SMOLLM_360M
+from repro.configs.whisper_small import CONFIG as WHISPER_SMALL
+from repro.configs.zamba2_7b import CONFIG as ZAMBA2_7B
+
+ASSIGNED_ARCHS: dict[str, ModelConfig] = {
+    c.name: c
+    for c in [
+        DEEPSEEK_V2_LITE_16B,
+        QWEN2_MOE_A2_7B,
+        QWEN2_VL_72B,
+        SMOLLM_360M,
+        COMMAND_R_PLUS_104B,
+        INTERNLM2_20B,
+        CHATGLM3_6B,
+        WHISPER_SMALL,
+        ZAMBA2_7B,
+        MAMBA2_130M,
+    ]
+}
+
+ARCHS: dict[str, ModelConfig] = {**ASSIGNED_ARCHS, **PAPER_MODELS}
+
+
+def get_arch(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def dryrun_cells() -> list[tuple[ModelConfig, InputShape]]:
+    """Every runnable (assigned arch × shape) baseline cell."""
+    cells = []
+    for cfg in ASSIGNED_ARCHS.values():
+        for shape in ALL_SHAPES:
+            ok, _ = shape_applicable(cfg, shape)
+            if ok:
+                cells.append((cfg, shape))
+    return cells
+
+
+def skipped_cells() -> list[tuple[str, str, str]]:
+    out = []
+    for cfg in ASSIGNED_ARCHS.values():
+        for shape in ALL_SHAPES:
+            ok, why = shape_applicable(cfg, shape)
+            if not ok:
+                out.append((cfg.name, shape.name, why))
+    return out

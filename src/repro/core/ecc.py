@@ -1,0 +1,222 @@
+"""Outlier-oriented on-die error correction (paper §VI), bit-exact in JAX.
+
+Per 16KB page of INT8 weights (16384 elements):
+
+* top-1% |magnitude| values (163 entries) are "outliers";
+* the ECC sidecar stores, per page:
+    - the protection threshold (smallest |outlier|), replicated 9×,
+    - per outlier: 14-bit address + 5-bit Hamming parity + N=2 value copies;
+  total 8*9 + (14+5+16)*163 = 5777 bits ≈ 722 B < 1664 B page spare area;
+* decode: per-bit majority vote of {in-page value, copy0, copy1} for protected
+  addresses (protected flip rate ≈ 3x² for raw BER x); any unprotected value
+  whose magnitude exceeds the threshold is a fake outlier minted by a bit flip
+  and is clamped to zero.
+
+All functions are jit/vmap friendly; pages batch along a leading axis.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PAGE_ELEMS = 16384
+OUTLIER_FRACTION = 0.01
+THRESHOLD_COPIES = 9
+VALUE_COPIES = 2  # N in the paper (even)
+ADDR_BITS = 14
+HAMMING_PARITY_BITS = 5
+
+
+def n_outliers(page_elems: int = PAGE_ELEMS) -> int:
+    return int(page_elems * OUTLIER_FRACTION)
+
+
+def ecc_size_bits(page_elems: int = PAGE_ELEMS) -> int:
+    """Paper: 8*9 + (14 + 5 + 8*N) * n_outliers bits (722 B for a 16KB page)."""
+    per_entry = ADDR_BITS + HAMMING_PARITY_BITS + 8 * VALUE_COPIES
+    return 8 * THRESHOLD_COPIES + per_entry * n_outliers(page_elems)
+
+
+class PageECC(NamedTuple):
+    """ECC sidecar for a batch of pages. Leading dims are batch dims."""
+
+    threshold: jax.Array  # (..., 9)  uint8 magnitude copies
+    addr: jax.Array       # (..., K)  uint16, 14-bit addresses
+    addr_parity: jax.Array  # (..., K) uint8, 5-bit Hamming parity
+    copies: jax.Array     # (..., K, N) uint8 bit patterns of the outlier values
+
+
+# --------------------------------------------------------------------------
+# Hamming(19,14) single-error-correcting code over the 14-bit address.
+# Parity bit p_i (i=0..4) covers data bits whose (position+1) has bit i set in
+# the classic Hamming layout.  We precompute masks over data-bit indices.
+# --------------------------------------------------------------------------
+
+
+@functools.lru_cache(None)
+def _hamming_layout():
+    """Return (data_positions, parity_positions) in the 19-bit codeword.
+
+    Codeword positions are 1-based 1..19; positions that are powers of two
+    (1,2,4,8,16) hold parity, the rest hold the 14 data bits in order.
+    """
+    parity_pos = [1, 2, 4, 8, 16]
+    data_pos = [p for p in range(1, 20) if p not in parity_pos]
+    return tuple(data_pos), tuple(parity_pos)
+
+
+def hamming_encode(addr: jax.Array) -> jax.Array:
+    """addr: uint16 with 14 significant bits -> 5-bit parity, uint8."""
+    data_pos, parity_pos = _hamming_layout()
+    addr = addr.astype(jnp.uint32)
+    parity = jnp.zeros_like(addr)
+    for i, pp in enumerate(parity_pos):
+        acc = jnp.zeros_like(addr)
+        for k, dp in enumerate(data_pos):
+            if dp & pp:
+                acc = acc ^ ((addr >> k) & 1)
+        parity = parity | (acc << i)
+    return parity.astype(jnp.uint8)
+
+
+def hamming_correct(addr: jax.Array, parity: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Correct single-bit errors in (addr, parity); return (addr, valid).
+
+    ``valid`` is False when the syndrome points outside the codeword (a
+    detectable multi-bit error) — the paper discards such entries.
+    Double-bit errors may alias to a miscorrection (inherent to SEC codes).
+    """
+    data_pos, parity_pos = _hamming_layout()
+    addr = addr.astype(jnp.uint32)
+    parity = parity.astype(jnp.uint32)
+    syndrome = jnp.zeros_like(addr)
+    for i, pp in enumerate(parity_pos):
+        acc = (parity >> i) & 1
+        for k, dp in enumerate(data_pos):
+            if dp & pp:
+                acc = acc ^ ((addr >> k) & 1)
+        syndrome = syndrome | (acc << i)
+    # syndrome == 0 -> clean. syndrome == codeword position -> flip that bit.
+    corrected = addr
+    for k, dp in enumerate(data_pos):
+        corrected = jnp.where(syndrome == dp, corrected ^ (1 << k), corrected)
+    # Parity-position syndromes (1,2,4,8,16) mean the parity bit itself
+    # flipped; the address is fine.
+    valid = syndrome <= 19
+    return corrected.astype(jnp.uint16), valid
+
+
+# --------------------------------------------------------------------------
+# Bit-level helpers
+# --------------------------------------------------------------------------
+
+
+def _majority3_u8(a: jax.Array, b: jax.Array, c: jax.Array) -> jax.Array:
+    return ((a & b) | (a & c) | (b & c)).astype(jnp.uint8)
+
+
+def _majority_bits(copies: jax.Array, axis: int) -> jax.Array:
+    """Per-bit majority over an odd number of uint8 copies along ``axis``."""
+    axis = axis % copies.ndim  # normalize; the bit axis is appended last
+    n = copies.shape[axis]
+    bits = jnp.stack([(copies >> k) & 1 for k in range(8)], axis=-1)  # (..., n, 8)
+    counts = bits.astype(jnp.int32).sum(axis=axis)
+    maj = (counts > n // 2).astype(jnp.uint8)
+    out = jnp.zeros(maj.shape[:-1], jnp.uint8)
+    for k in range(8):
+        out = out | (maj[..., k] << k)
+    return out
+
+
+def _abs_i8(v_u8: jax.Array) -> jax.Array:
+    """|value| of an int8 bit pattern, computed in int32 (|-128| = 128)."""
+    return jnp.abs(v_u8.astype(jnp.int8).astype(jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# Encode / decode
+# --------------------------------------------------------------------------
+
+
+def encode_page(page_u8: jax.Array) -> PageECC:
+    """Build the ECC sidecar for one page of int8 bit patterns (uint8[P])."""
+    p = page_u8.shape[-1]
+    k = n_outliers(p)
+    mags = _abs_i8(page_u8)
+    top_mags, top_idx = jax.lax.top_k(mags, k)
+    threshold_mag = top_mags[-1]  # smallest protected magnitude
+    threshold = jnp.broadcast_to(
+        jnp.minimum(threshold_mag, 255).astype(jnp.uint8), (THRESHOLD_COPIES,))
+    addr = top_idx.astype(jnp.uint16)
+    parity = hamming_encode(addr)
+    vals = page_u8[top_idx]
+    copies = jnp.broadcast_to(vals[:, None], (k, VALUE_COPIES)).astype(jnp.uint8)
+    return PageECC(threshold=threshold, addr=addr, addr_parity=parity, copies=copies)
+
+
+def decode_page(page_u8: jax.Array, ecc: PageECC) -> jax.Array:
+    """Correct one (possibly corrupted) page given its (possibly corrupted) ECC."""
+    threshold = _majority_bits(ecc.threshold, axis=-1).astype(jnp.int32)
+    addr, valid = hamming_correct(ecc.addr, ecc.addr_parity)
+    addr = jnp.minimum(addr.astype(jnp.int32), page_u8.shape[-1] - 1)
+
+    # Fake-outlier suppression: unprotected values above threshold -> 0.
+    mags = _abs_i8(page_u8)
+    protected_mask = jnp.zeros(page_u8.shape[-1], bool).at[addr].set(valid, mode="drop")
+    out = jnp.where((mags > threshold) & ~protected_mask, jnp.uint8(0), page_u8)
+
+    # Outlier restoration: per-bit majority of {in-page value, copy0, copy1}.
+    in_page = page_u8[addr]
+    voted = _majority3_u8(in_page, ecc.copies[:, 0], ecc.copies[:, 1])
+    restored = jnp.where(valid, voted, out[addr])
+    return out.at[addr].set(restored, mode="drop")
+
+
+def encode_pages(pages_u8: jax.Array) -> PageECC:
+    """vmap of encode_page over a leading batch of pages (B, P)."""
+    return jax.vmap(encode_page)(pages_u8)
+
+
+def decode_pages(pages_u8: jax.Array, ecc: PageECC) -> jax.Array:
+    return jax.vmap(decode_page)(pages_u8, ecc)
+
+
+# --------------------------------------------------------------------------
+# Error injection (the paper's "flash error models of varying intensities")
+# --------------------------------------------------------------------------
+
+
+def inject_bitflips(arr_u8: jax.Array, ber: float, key: jax.Array) -> jax.Array:
+    """Flip each bit of ``arr_u8`` independently with probability ``ber``."""
+    flips = jax.random.bernoulli(key, ber, arr_u8.shape + (8,))
+    weights = (1 << jnp.arange(8, dtype=jnp.uint32))
+    mask = (flips.astype(jnp.uint32) * weights).sum(-1).astype(jnp.uint8)
+    return arr_u8 ^ mask
+
+
+def inject_ecc_bitflips(ecc: PageECC, ber: float, key: jax.Array) -> PageECC:
+    """Corrupt the ECC sidecar itself (it lives in the same flash)."""
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    thr = inject_bitflips(ecc.threshold, ber, k1)
+    copies = inject_bitflips(ecc.copies, ber, k2)
+    parity = inject_bitflips(ecc.addr_parity, ber, k3) & 0x1F
+    addr16 = ecc.addr
+    flips = jax.random.bernoulli(k4, ber, addr16.shape + (ADDR_BITS,))
+    weights = (1 << jnp.arange(ADDR_BITS, dtype=jnp.uint32))
+    mask = (flips.astype(jnp.uint32) * weights).sum(-1).astype(jnp.uint16)
+    return PageECC(threshold=thr, addr=addr16 ^ mask, addr_parity=parity, copies=copies)
+
+
+def protected_flip_rate(ber: float, n_copies: int = VALUE_COPIES) -> float:
+    """Closed form f_prot ≈ C(N+1, N/2+1) x^{N/2+1} (paper §VI). N=2 -> 3x²."""
+    import math
+
+    n = n_copies
+    total = 0.0
+    for i in range(n // 2 + 1, n + 2):
+        total += math.comb(n + 1, i) * ber**i * (1 - ber) ** (n + 1 - i)
+    return total

@@ -1,0 +1,101 @@
+"""Hardware descriptions for Cambricon-LLM and its TPU adaptation.
+
+Two families of hardware specs live here:
+
+* :class:`FlashSpec` / :class:`NPUSpec` — the paper's edge hardware (NAND flash
+  with on-die compute cores behind shared channels, a small systolic NPU with
+  LPDDR5X).  These drive the §V tiling formulas and the ``sim/`` event
+  simulator that reproduces the paper's evaluation.
+* :class:`TPUSpec` — the TPU v5e target used by the multi-pod framework.  The
+  same α-split planner (``core/partition_plan.py``) consumes it to divide each
+  matrix between "ship-activations" (reduce-scatter) and "ship-weights"
+  (all-gather) paths — the TPU-native realization of read-compute vs read
+  requests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class FlashSpec:
+    """NAND flash organisation (paper Table II).
+
+    ``bw_channel`` is bytes/s on one channel bus (1000 MT/s × 8-bit = 1 GB/s).
+    ``t_r`` is the page read time (NAND array -> data register), seconds.
+    """
+
+    channels: int = 8
+    chips_per_channel: int = 2
+    dies_per_chip: int = 2
+    planes_per_die: int = 2
+    ccores_per_die: int = 1
+    page_bytes: int = 16 * 1024
+    t_r: float = 30e-6
+    t_cmd: float = 1e-6  # per-request command/address + FTL overhead (ONFI)
+    bw_channel: float = 1.0e9  # 1000 MT/s, 8-bit bus
+    # On-die compute core rating: must match array read speed (paper §IV-B).
+    ccore_ops_per_s: float = 1.6e9
+
+    @property
+    def ccores_per_channel(self) -> int:
+        return self.chips_per_channel * self.dies_per_chip * self.ccores_per_die
+
+    @property
+    def total_ccores(self) -> int:
+        return self.channels * self.ccores_per_channel
+
+    @property
+    def total_channel_bw(self) -> float:
+        return self.channels * self.bw_channel
+
+    @property
+    def page_read_bw_per_ccore(self) -> float:
+        """Sustained array->register bandwidth one pipelined compute core sees."""
+        return self.page_bytes / self.t_r
+
+    @property
+    def in_flash_bw(self) -> float:
+        """Aggregate in-flash weight-processing bandwidth (all ccores)."""
+        return self.total_ccores * self.page_read_bw_per_ccore
+
+
+# Paper Table II configurations. S/M/L differ only in channel & chip counts.
+CAMBRICON_LLM_S = FlashSpec(channels=8, chips_per_channel=2)
+CAMBRICON_LLM_M = FlashSpec(channels=16, chips_per_channel=4)
+CAMBRICON_LLM_L = FlashSpec(channels=32, chips_per_channel=8)
+
+FLASH_CONFIGS = {
+    "S": CAMBRICON_LLM_S,
+    "M": CAMBRICON_LLM_M,
+    "L": CAMBRICON_LLM_L,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class NPUSpec:
+    """The paper's edge NPU: 16x16 systolic @1GHz = 2 TOPS INT8, LPDDR5X DRAM."""
+
+    ops_per_s: float = 2.0e12
+    dram_bw: float = 40.0e9  # LPDDR5X ~40 GB/s, holds only the KV cache
+    sfu_ops_per_s: float = 32.0e9  # special functions (softmax, sin/cos, ...)
+
+
+DEFAULT_NPU = NPUSpec()
+
+
+@dataclasses.dataclass(frozen=True)
+class TPUSpec:
+    """TPU v5e-class chip constants used for roofline + the TPU-mode planner."""
+
+    peak_flops_bf16: float = 197e12
+    peak_ops_int8: float = 394e12
+    hbm_bw: float = 819e9
+    ici_bw_per_link: float = 50e9  # ~50 GB/s per ICI link
+    hbm_bytes: int = 16 * 1024**3
+    vmem_bytes: int = 128 * 1024**2  # ~128MB VMEM on v5e-class
+    mxu_dim: int = 128
+
+
+TPU_V5E = TPUSpec()

@@ -1,0 +1,106 @@
+"""Fault-tolerant checkpointing (pure numpy — no orbax dependency).
+
+Layout:  <dir>/step_<n>/shard_<i>.npz + manifest.json, written atomically
+(tmp dir + rename).  Keeps the last ``keep`` steps.  Restore validates the
+manifest (leaf count, shapes, dtypes) and can re-shard to a different device
+count (elastic restart: arrays are stored unsharded per-leaf; placement is
+re-derived from the current mesh by the caller via distributed/sharding.py).
+The data-pipeline state (training/data.DataState) rides in the manifest so a
+restarted job resumes mid-stream deterministically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import tempfile
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, extra: dict | None = None,
+                    keep: int = 3) -> str:
+    """Atomically persist a pytree; returns the final path."""
+    leaves, treedef = _flatten(tree)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = tempfile.mkdtemp(dir=ckpt_dir, prefix=".tmp_")
+    try:
+        arrs = {}
+        for i, l in enumerate(leaves):
+            a = np.asarray(l)
+            if a.dtype.name == "bfloat16":  # npz has no native bf16
+                a = a.view(np.uint16)
+            arrs[f"leaf_{i}"] = a
+        np.savez(os.path.join(tmp, "shard_0.npz"), **arrs)
+        manifest = {
+            "step": step,
+            "n_leaves": len(leaves),
+            "treedef": str(treedef),
+            "shapes": [list(np.shape(l)) for l in leaves],
+            "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+            "extra": extra or {},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    for d in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, d), ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = sorted(d for d in os.listdir(ckpt_dir) if d.startswith("step_"))
+    valid = [d for d in steps
+             if os.path.exists(os.path.join(ckpt_dir, d, "manifest.json"))]
+    return int(valid[-1].split("_")[1]) if valid else None
+
+
+def restore_checkpoint(ckpt_dir: str, like_tree, step: int | None = None
+                       ) -> tuple[object, dict]:
+    """Restore into the structure of ``like_tree``; returns (tree, extra)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "shard_0.npz"))
+    leaves_like, treedef = _flatten(like_tree)
+    if manifest["n_leaves"] != len(leaves_like):
+        raise ValueError(
+            f"checkpoint has {manifest['n_leaves']} leaves, "
+            f"model expects {len(leaves_like)}")
+    import ml_dtypes
+
+    leaves = []
+    for i, like in enumerate(leaves_like):
+        arr = data[f"leaf_{i}"]
+        if manifest["dtypes"][i] == "bfloat16":
+            arr = arr.view(ml_dtypes.bfloat16)
+        if list(arr.shape) != list(np.shape(like)):
+            raise ValueError(f"leaf {i}: shape {arr.shape} != "
+                             f"{np.shape(like)}")
+        leaves.append(arr)
+    return jax.tree.unflatten(treedef, leaves), manifest["extra"]

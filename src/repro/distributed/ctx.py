@@ -1,0 +1,55 @@
+"""Trace-time context for distribution concerns that cut across model code.
+
+The model zoo stays pure; the launcher configures, per lowering:
+  * ``constrain``    — sharding constraint applied to the residual stream at
+                       layer boundaries (sequence-parallel activations);
+  * ``remat``        — per-layer rematerialization inside layer scans;
+  * ``unroll_scans`` — unroll lax.scan loops (used by the roofline cost
+                       variants so cost_analysis sees every layer; while-loop
+                       bodies are otherwise counted once).
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Callable
+
+import jax
+
+_STATE = {
+    "constrain": None,   # Callable[[jax.Array], jax.Array] | None
+    "remat": False,
+    "unroll_scans": False,
+    "mesh": None,        # jax.sharding.Mesh | None — enables shard_map paths
+}
+
+
+@contextlib.contextmanager
+def lowering_ctx(constrain: Callable | None = None, remat: bool = False,
+                 unroll_scans: bool = False, mesh=None):
+    old = dict(_STATE)
+    _STATE.update(constrain=constrain, remat=remat,
+                  unroll_scans=unroll_scans, mesh=mesh)
+    try:
+        yield
+    finally:
+        _STATE.update(old)
+
+
+def mesh():
+    return _STATE["mesh"]
+
+
+def constrain(x: jax.Array, kind: str = "resid") -> jax.Array:
+    fn = _STATE["constrain"]
+    return fn(x, kind) if fn is not None else x
+
+
+def maybe_remat(f):
+    return jax.checkpoint(f) if _STATE["remat"] else f
+
+
+def scan(f, init, xs, **kw):
+    if _STATE["unroll_scans"]:
+        kw["unroll"] = True
+    return jax.lax.scan(f, init, xs, **kw)

@@ -1,0 +1,57 @@
+"""Elastic scaling: re-shard a job onto a different device count.
+
+At 1000+-node scale, node loss means restarting on N' ≠ N devices.  Because
+checkpoints store leaves unsharded (distributed/checkpoint.py) and every
+sharding is *derived* (name+shape rules in distributed/sharding.py), elastic
+restart is: build the mesh for the surviving devices, re-derive shardings,
+device_put the restored pytree.  ``plan_remesh`` picks the new mesh shape;
+``reshard_tree`` performs the placement.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import Mesh
+
+from repro.distributed import sharding as shd
+
+
+def plan_remesh(n_devices: int, prefer_model: int = 16,
+                multi_pod_threshold: int = 512) -> tuple[tuple, tuple]:
+    """Choose (shape, axis_names) for an arbitrary surviving device count.
+
+    Keeps the model axis as close to ``prefer_model`` as divisibility allows
+    (TP degree changes invalidate head-sharding less often than data-axis
+    changes invalidate nothing).
+    """
+    model = math.gcd(n_devices, prefer_model)
+    rest = n_devices // model
+    if n_devices >= multi_pod_threshold and rest % 2 == 0:
+        return (rest // 2 and (2, rest // 2, model) or (1, rest, model),
+                ("pod", "data", "model"))
+    return (rest, model), ("data", "model")
+
+
+def make_elastic_mesh(devices=None, prefer_model: int = 16) -> Mesh:
+    devices = devices if devices is not None else jax.devices()
+    shape, names = plan_remesh(len(devices), prefer_model)
+    import numpy as np
+
+    return Mesh(np.array(devices).reshape(shape), names)
+
+
+def reshard_params(params, mesh: Mesh):
+    """Place a (restored, host-resident) param tree onto a new mesh."""
+    shardings = shd.params_shardings(
+        jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), params),
+        mesh)
+    return jax.tree.map(jax.device_put, params, shardings)
+
+
+def reshard_cache(cache, mesh: Mesh, batch: int):
+    shardings = shd.cache_shardings(
+        jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), cache),
+        mesh, batch)
+    return jax.tree.map(jax.device_put, cache, shardings)

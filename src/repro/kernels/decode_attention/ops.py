@@ -1,0 +1,24 @@
+"""jit'd wrapper for the decode-attention kernel (pads Smax to block)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.decode_attention import gqa_decode_attention
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention_op(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                        length: jax.Array, block_k: int = 512,
+                        interpret: bool = True) -> jax.Array:
+    smax = k_cache.shape[1]
+    bk = min(block_k, smax)
+    pad = (-smax) % bk
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return gqa_decode_attention(q, k_cache, v_cache, length, block_k=bk,
+                                interpret=interpret)

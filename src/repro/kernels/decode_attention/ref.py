@@ -1,0 +1,3 @@
+"""Oracle: models/attention.decode_attention is the reference."""
+
+from repro.models.attention import decode_attention as decode_attention_ref  # noqa: F401

@@ -1,0 +1,75 @@
+"""On-die ECC decode Pallas kernel (paper §VI / Fig. 8b).
+
+Per 16KB page: (1) fake-outlier suppression — any unprotected value whose
+|magnitude| exceeds the majority-voted threshold is clamped to 0; (2) outlier
+restoration — the 163 protected entries are re-written with the per-bit
+majority vote of {in-page value, copy0, copy1} at their (Hamming-corrected)
+addresses via an in-kernel fori_loop of dynamic stores.
+
+The address Hamming correction and threshold majority are tiny bit-twiddling
+ops done outside the kernel (core/ecc.py); the kernel fuses the page-wide
+clamp + scatter, which is the part that touches all 16K elements.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(page_ref, thr_ref, addr_ref, voted_ref, valid_ref, out_ref):
+    page = page_ref[0]                               # [P] uint8 bit patterns
+    vals = page.astype(jnp.int8).astype(jnp.int32)
+    mags = jnp.abs(vals)
+    thr = thr_ref[pl.program_id(0)]  # SMEM ref holds the whole [B] vector
+    # protected-position mask via scatter of valid addrs
+    k = addr_ref.shape[1]
+
+    out = jnp.where(mags > thr, jnp.uint8(0), page)
+    out_ref[0] = out
+
+    def body(i, _):
+        addr = addr_ref[0, i]
+        val = voted_ref[0, i]
+        ok = valid_ref[0, i]
+        cur = pl.load(out_ref, (0, pl.ds(addr, 1)))
+        new = jnp.where(ok, val, cur[0])
+        pl.store(out_ref, (0, pl.ds(addr, 1)), new[None])
+        return 0
+
+    jax.lax.fori_loop(0, k, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ecc_decode_pages(pages: jax.Array, thr: jax.Array, addr: jax.Array,
+                     voted: jax.Array, valid: jax.Array,
+                     interpret: bool = True) -> jax.Array:
+    """pages: uint8 [B, P]; thr: int32 [B]; addr: int32 [B, K];
+    voted: uint8 [B, K]; valid: bool->uint8 [B, K].  Returns corrected pages.
+
+    The scatter inside the clamp region restores protected outliers; entries
+    with valid=0 keep the clamped value (paper: 2-bit address errors discard
+    the protection).
+    """
+    b, p = pages.shape
+    k = addr.shape[1]
+    return pl.pallas_call(
+        _kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, p), lambda i: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, k), lambda i: (i, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, k), lambda i: (i, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, k), lambda i: (i, 0), memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, p), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, p), jnp.uint8),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+    )(pages, thr, addr, voted, valid)

@@ -1,0 +1,4 @@
+"""Oracle: core/ecc.decode_pages (the bit-exact jnp implementation)."""
+
+from repro.core.ecc import decode_page as decode_page_ref  # noqa: F401
+from repro.core.ecc import decode_pages as decode_pages_ref  # noqa: F401

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the paged W8A8 GeMV kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.int8 import quantize_activation
+
+
+def paged_int8_gemm_ref(w_q: jax.Array, x_q: jax.Array) -> jax.Array:
+    """int32[h, b] = int8[h, w] @ int8[w, b] (exact integer reference)."""
+    return jax.lax.dot_general(
+        w_q.astype(jnp.int32), x_q.astype(jnp.int32),
+        (((1,), (0,)), ((), ())))
+
+
+def paged_int8_gemv_ref(w_q: jax.Array, scale: jax.Array,
+                        x: jax.Array) -> jax.Array:
+    """Full W8A8 path: quantize activations, int GeMV, dequantize.
+
+    x: [w] or [w, b] float; returns f32 [h] or [h, b].
+    """
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[:, None]
+    x_q, x_scale = quantize_activation(x)
+    acc = paged_int8_gemm_ref(w_q, x_q).astype(jnp.float32)
+    y = acc * scale[:, None] * x_scale
+    return y[:, 0] if squeeze else y

@@ -1,0 +1,24 @@
+"""Oracle for the SSD intra-chunk kernel (mirrors models/ssm.ssd_chunked's
+y_diag term)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.ssm import _segsum
+
+
+def ssd_intra_chunk_ref(a: jax.Array, b_mat: jax.Array, c_mat: jax.Array,
+                        x: jax.Array) -> jax.Array:
+    """a: [BH, C, Q]; b/c: [BG, C, Q, N]; x: [BH, C, Q, P] -> [BH, C, Q, P]."""
+    bh = a.shape[0]
+    bg = b_mat.shape[0]
+    rep = bh // bg
+    b_full = jnp.repeat(b_mat, rep, axis=0)
+    c_full = jnp.repeat(c_mat, rep, axis=0)
+    ell = jnp.exp(_segsum(a.astype(jnp.float32)))
+    ell = jnp.where(jnp.isfinite(ell), ell, 0.0)
+    s = jnp.einsum("gcln,gcsn->gcls", c_full.astype(jnp.float32),
+                   b_full.astype(jnp.float32)) * ell
+    return jnp.einsum("gcls,gcsp->gclp", s, x.astype(jnp.float32))

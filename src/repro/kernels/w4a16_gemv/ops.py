@@ -1,0 +1,34 @@
+"""jit'd wrapper for the W4A16 kernel."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.w4a16_gemv.w4a16_gemv import w4a16_gemm
+from repro.quant.int4 import GROUP, QuantizedLinear4
+
+
+def w4a16_gemv(q: QuantizedLinear4, x: jax.Array, tile_h: int = 256,
+               tile_w: int = 2048, interpret: bool = True) -> jax.Array:
+    """Not jitted at this level: q.h/q.w are static python ints that drive
+    padding/tiling; the inner pallas_call wrapper is jitted."""
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[:, None]
+    h, w = q.h, q.w
+    group = min(GROUP, w)
+    tw = min(tile_w, w)
+    tw -= tw % (2 * group) or 0
+    tw = max(tw, 2 * group)
+    th = min(tile_h, h)
+    ph = (-h) % th
+    pw = (-w) % tw
+    wp = jnp.pad(q.w_packed, ((0, ph), (0, pw // 2)))
+    sc = jnp.pad(q.scale, ((0, ph), (0, pw // group)))
+    xp = jnp.pad(x, ((0, pw), (0, 0)))
+    y = w4a16_gemm(wp, sc, xp, tile_h=th, tile_w=tw, group=group,
+                   interpret=interpret)[:h]
+    return y[:, 0] if squeeze else y

@@ -1,0 +1,17 @@
+"""Oracle for the W4A16 kernel: quant/int4.py's dequantize + matmul."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.quant.int4 import QuantizedLinear4, dequantize4
+
+
+def w4a16_gemv_ref(q: QuantizedLinear4, x: jax.Array) -> jax.Array:
+    w = dequantize4(q)
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[:, None]
+    y = w @ x.astype(jnp.float32)
+    return y[:, 0] if squeeze else y

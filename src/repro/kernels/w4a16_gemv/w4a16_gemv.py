@@ -1,0 +1,67 @@
+"""W4A16 GeMV Pallas kernel (paper §VIII-B / Fig. 11).
+
+Packed int4 weights (two nibbles per byte) are unpacked and dequantized
+in-VMEM with group-wise scales, then matmul'd against 16-bit activations.
+Tiles follow the same page-derived shapes as the int8 kernel (a page holds
+2x the elements at 4 bits — the planner's bytes_per_elem=0.5 mode).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(wp_ref, scale_ref, x_ref, out_ref, *, group):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    packed = wp_ref[...]                       # [th, tw//2] uint8
+    lo = (packed & 0xF).astype(jnp.int8) - 8
+    hi = ((packed >> 4) & 0xF).astype(jnp.int8) - 8
+    w_q = jnp.stack([lo, hi], axis=-1).reshape(packed.shape[0], -1)  # [th, tw]
+    th, tw = w_q.shape
+    scales = scale_ref[...]                    # [th, tw//group]
+    w = (w_q.reshape(th, tw // group, group).astype(jnp.float32)
+         * scales[:, :, None]).reshape(th, tw)
+    acc = jax.lax.dot_general(
+        w, x_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    out_ref[...] += acc
+
+
+@functools.partial(jax.jit, static_argnames=("tile_h", "tile_w", "group",
+                                             "interpret"))
+def w4a16_gemm(w_packed: jax.Array, scales: jax.Array, x: jax.Array,
+               tile_h: int = 256, tile_w: int = 2048, group: int = 128,
+               interpret: bool = True) -> jax.Array:
+    """f32[h, b] = dequant(int4[h, w]) @ f16/f32[w, b].
+
+    w_packed: uint8 [h, w//2]; scales: f32 [h, w//group]; x: [w, b].
+    Pre-padded to tile multiples (see ops.py)."""
+    h, wb = w_packed.shape
+    w = wb * 2
+    b = x.shape[1]
+    assert h % tile_h == 0 and w % tile_w == 0
+    grid = (h // tile_h, w // tile_w)
+    return pl.pallas_call(
+        functools.partial(_kernel, group=group),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_h, tile_w // 2), lambda i, j: (i, j)),
+            pl.BlockSpec((tile_h, tile_w // group), lambda i, j: (i, j)),
+            pl.BlockSpec((tile_w, b), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_h, b), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, b), jnp.float32),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+    )(w_packed, scales, x)

@@ -1,0 +1,80 @@
+"""Fan out every dry-run cell as a subprocess (isolation: one bad cell can't
+kill the sweep; each process gets its own 512-device XLA init).
+
+Usage: PYTHONPATH=src python -m repro.launch.dryrun_all [--jobs 1]
+       [--mesh single|multi|both] [--skip-done]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import subprocess
+import sys
+
+from repro.configs.registry import dryrun_cells, skipped_cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=1)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--skip-cost", action="store_true")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = []
+    # smallest-first: quick wins early, failures surface fast
+    for cfg, shape in sorted(dryrun_cells(),
+                             key=lambda cs: cs[0].param_count()):
+        for mesh in meshes:
+            cells.append((cfg.name, shape.name, mesh))
+
+    print(f"{len(cells)} cells; skipped (documented): "
+          f"{len(skipped_cells())}", flush=True)
+    procs: list[tuple[subprocess.Popen, tuple]] = []
+    failures = []
+
+    def reap(block: bool):
+        for p, cell in list(procs):
+            if block:
+                p.wait()
+            if p.poll() is not None:
+                procs.remove((p, cell))
+                status = "ok" if p.returncode == 0 else f"rc={p.returncode}"
+                print(f"[{status}] {cell}", flush=True)
+                if p.returncode != 0:
+                    failures.append(cell)
+
+    for arch, shape, mesh in cells:
+        path = os.path.join(args.out, f"{arch}__{shape}__{mesh}.json")
+        if args.skip_done and os.path.exists(path):
+            import json
+
+            try:
+                rec = json.load(open(path))
+                if rec.get("status") == "ok" and (
+                        mesh == "multi" or args.skip_cost
+                        or "cost" in rec):
+                    print(f"[cached] {(arch, shape, mesh)}", flush=True)
+                    continue
+            except Exception:
+                pass
+        while len(procs) >= args.jobs:
+            reap(block=True)
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--mesh", mesh, "--out", args.out]
+        if args.skip_cost:
+            cmd.append("--skip-cost")
+        procs.append((subprocess.Popen(
+            cmd, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL),
+            (arch, shape, mesh)))
+    reap(block=True)
+    print(f"done; {len(failures)} failures: {failures}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Parse collective traffic out of post-SPMD-partitioning HLO text.
+
+``collective_bytes`` sums, per collective opcode, the result-shape bytes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute in the optimized module.  Link-traffic weighting for the
+roofline is applied downstream (all-reduce counts 2x: ring reduce-scatter +
+all-gather phases).
+
+NOTE: ops inside while loops (lax.scan) appear once in the text but execute
+trip-count times — the dry-run therefore extracts per-layer costs from
+fully-unrolled shallow variants and extrapolates (launch/dryrun.py).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*([^=]+?)\s+(" + "|".join(c + r"(?:-start|-done)?" for c in _COLLECTIVES) + r")\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Returns {opcode: result bytes} summed over the module (loops counted
+    once — see module docstring), plus op counts under "<op>_count"."""
+    out: dict[str, float] = defaultdict(float)
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        if op.endswith("-done"):
+            continue  # counted at the matching -start
+        op = op.replace("-start", "")
+        b = _shape_bytes(shape_str)
+        out[op] += b
+        out[op + "_count"] += 1
+    return dict(out)
+
+
+def link_traffic_bytes(coll: dict[str, float]) -> float:
+    """Per-device ICI traffic estimate: ring all-reduce moves ~2x the buffer,
+    the others ~1x the result buffer."""
+    total = 0.0
+    for op, b in coll.items():
+        if op.endswith("_count"):
+            continue
+        total += 2.0 * b if op == "all-reduce" else b
+    return total

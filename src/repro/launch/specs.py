@@ -1,0 +1,71 @@
+"""ShapeDtypeStruct stand-ins for every (arch × shape) dry-run cell.
+
+``input_specs`` returns weak-type-correct, shardable specs — no device
+allocation ever happens in the dry-run (the shannon/kernels pattern).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import model as model_lib
+from repro.quant.convert import quantize_params
+from repro.training.optimizer import init_adamw
+
+
+def model_extras_specs(cfg: ModelConfig, batch: int) -> dict:
+    extras = {}
+    if cfg.family == "vlm":
+        extras["vision_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "audio":
+        extras["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    return extras
+
+
+def param_specs(cfg: ModelConfig, max_seq: int, quant: bool,
+                dtype=jnp.bfloat16):
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+    def build(k):
+        p = model_lib.init_params(cfg, k, dtype=dtype, max_seq=max_seq)
+        return quantize_params(p) if quant else p
+
+    return jax.eval_shape(build, key)
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_seq: int,
+                dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: model_lib.init_cache(cfg, batch, max_seq, dtype))
+
+
+def opt_specs(param_spec_tree):
+    return jax.eval_shape(init_adamw, param_spec_tree)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> dict:
+    """Stand-ins for the *data* inputs of the lowered step function."""
+    b = shape.global_batch
+    if shape.kind == "train":
+        toks = jax.ShapeDtypeStruct((b, _text_len(cfg, shape.seq_len)),
+                                    jnp.int32)
+        return {"tokens": toks, "extras": model_extras_specs(cfg, b)}
+    if shape.kind == "prefill":
+        toks = jax.ShapeDtypeStruct((b, _text_len(cfg, shape.seq_len)),
+                                    jnp.int32)
+        return {"tokens": toks, "extras": model_extras_specs(cfg, b)}
+    # decode: one new token against a seq_len-deep cache
+    return {"token": jax.ShapeDtypeStruct((b,), jnp.int32)}
+
+
+def _text_len(cfg: ModelConfig, seq_len: int) -> int:
+    """vlm cells: seq_len counts vision prefix + text tokens."""
+    if cfg.family == "vlm":
+        return seq_len - cfg.n_vision_tokens
+    return seq_len

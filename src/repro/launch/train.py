@@ -1,0 +1,73 @@
+"""End-to-end training driver (local devices).
+
+Example (the deliverable "train a ~100M model for a few hundred steps"):
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-360m \
+      --reduced 0 --steps 300 --batch 8 --seq 256
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_arch
+from repro.distributed.checkpoint import (latest_step, restore_checkpoint,
+                                          save_checkpoint)
+from repro.models import model as model_lib
+from repro.training.data import DataState, make_batch
+from repro.training.optimizer import init_adamw
+from repro.training.train_loop import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--reduced", type=int, default=1)
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0),
+                                   dtype=jnp.float32, max_seq=args.seq)
+    opt = init_adamw(params)
+    ds = DataState(seed=0, step=0)
+    start = 0
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        (params, opt), extra = restore_checkpoint(args.ckpt_dir, (params, opt))
+        ds = DataState(seed=0, step=extra["data_step"])
+        start = extra["train_step"]
+        print(f"resumed from step {start}")
+
+    step_fn = jax.jit(make_train_step(cfg, microbatches=args.microbatches,
+                                      lr=args.lr, remat=False))
+    n_params = sum(p.size for p in jax.tree.leaves(params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"batch={args.batch}x{args.seq}")
+    t0 = time.time()
+    for i in range(start, args.steps):
+        toks, ds = make_batch(ds, args.batch, args.seq, cfg.vocab_size)
+        params, opt, loss = step_fn(params, opt, toks, None)
+        if i % args.log_every == 0 or i == args.steps - 1:
+            tps = args.batch * args.seq * (i - start + 1) / (time.time() - t0)
+            print(f"step {i:5d} loss {float(loss):.4f} tok/s {tps:,.0f}",
+                  flush=True)
+        if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, i + 1, (params, opt),
+                            extra={"train_step": i + 1, "data_step": ds.step})
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

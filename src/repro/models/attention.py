@@ -1,0 +1,124 @@
+"""Attention: chunked (flash-style) full attention + single-token decode.
+
+Pure-jnp implementations used by every model and by the dry-run lowering;
+the Pallas kernels in kernels/flash_attention and kernels/decode_attention
+are the TPU hot-path versions validated against these in tests.
+
+Memory discipline: scores materialize only per (q_chunk, kv_chunk) block via
+a double ``lax.scan`` with online softmax, so prefill_32k fits. Causality is
+mask-based inside blocks (upper-triangle blocks are computed-then-masked;
+see EXPERIMENTS.md §Perf for the accounting).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k: jax.Array, n_rep: int) -> jax.Array:
+    """[B, S, Hkv, D] -> [B, S, Hkv*n_rep, D] (GQA head sharing)."""
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)
+                            ).reshape(b, s, h * n_rep, d)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      causal: bool = True, q_chunk: int = 1024,
+                      kv_chunk: int = 1024,
+                      positions_q: jax.Array | None = None,
+                      positions_kv: jax.Array | None = None) -> jax.Array:
+    """Online-softmax attention over chunks.
+
+    q: [B, Sq, H, D]; k/v: [B, Skv, Hkv, D]. Returns [B, Sq, H, D].
+    """
+    b, sq, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    k = _repeat_kv(k, h // hkv)
+    v = _repeat_kv(v, h // hkv)
+    q_chunk = min(q_chunk, sq)
+    kv_chunk = min(kv_chunk, skv)
+    nq = -(-sq // q_chunk)
+    nkv = -(-skv // kv_chunk)
+    pad_q = nq * q_chunk - sq
+    pad_kv = nkv * kv_chunk - skv
+    if positions_q is None:
+        positions_q = jnp.broadcast_to(jnp.arange(sq), (b, sq))
+    if positions_kv is None:
+        positions_kv = jnp.broadcast_to(jnp.arange(skv), (b, skv))
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_kv), (0, 0), (0, 0)))
+    pq = jnp.pad(positions_q, ((0, 0), (0, pad_q)), constant_values=-1)
+    pkv = jnp.pad(positions_kv, ((0, 0), (0, pad_kv)), constant_values=2**30)
+
+    qs = qp.reshape(b, nq, q_chunk, h, d).transpose(1, 0, 3, 2, 4)  # [nq,B,H,Cq,D]
+    ks = kp.reshape(b, nkv, kv_chunk, h, d).transpose(1, 0, 3, 2, 4)
+    vs = vp.reshape(b, nkv, kv_chunk, h, d).transpose(1, 0, 3, 2, 4)
+    pqs = pq.reshape(b, nq, q_chunk).transpose(1, 0, 2)   # [nq, B, Cq]
+    pkvs = pkv.reshape(b, nkv, kv_chunk).transpose(1, 0, 2)
+
+    sm_scale = d ** -0.5
+
+    def q_step(_, qc):
+        q_blk, pq_blk = qc  # [B,H,Cq,D], [B,Cq]
+
+        # checkpoint: recompute s/p during backward instead of storing the
+        # [B,H,Cq,Ckv] probabilities for every (q,kv) chunk pair (which is
+        # what turns a 32k-token prefill into tens of GB of residuals)
+        @jax.checkpoint
+        def kv_step(carry, kc):
+            m, l, acc = carry
+            k_blk, v_blk, pk_blk = kc
+            s = jnp.einsum("bhqd,bhkd->bhqk", q_blk.astype(jnp.float32),
+                           k_blk.astype(jnp.float32)) * sm_scale
+            if causal:
+                mask = pq_blk[:, None, :, None] >= pk_blk[:, None, None, :]
+            else:
+                mask = (pk_blk < 2**30)[:, None, None, :]
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bhqk,bhkd->bhqd", p, v_blk.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, h, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, h, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, h, q_chunk, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), (ks, vs, pkvs))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]
+        return None, out
+
+    _, outs = jax.lax.scan(q_step, None, (qs, pqs))  # [nq, B, H, Cq, D]
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, nq * q_chunk, h, d)
+    return out[:, :sq].astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     length: jax.Array) -> jax.Array:
+    """One-token attention against a cache.
+
+    q: [B, H, D]; k_cache/v_cache: [B, Smax, Hkv, D]; length: [] or [B]
+    (valid prefix length, the new token's kv already written).
+    """
+    b, smax, hkv, d = k_cache.shape
+    h = q.shape[1]
+    k = _repeat_kv(k_cache, h // hkv)
+    v = _repeat_kv(v_cache, h // hkv)
+    s = jnp.einsum("bhd,bshd->bhs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    pos = jnp.arange(smax)
+    valid = pos[None, :] < jnp.asarray(length).reshape(-1, 1)
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhs,bshd->bhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

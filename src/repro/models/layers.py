@@ -1,0 +1,157 @@
+"""Shared model layers: norms, RoPE variants, linear (float or W8A8), MLP."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def rms_norm(x: jax.Array, gamma: jax.Array, eps: float = 1e-5) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear: params are either {"w": [in, out] float} or the W8A8 form
+# {"w_q": int8 [out, in], "scale": f32 [out]} (+ optional {"b": [out]}).
+# ---------------------------------------------------------------------------
+
+
+def linear(params: dict, x: jax.Array) -> jax.Array:
+    if "w_q" in params:
+        y = _w8a8_matmul(params["w_q"], params["scale"], x)
+    else:
+        y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def _w8a8_matmul(w_q: jax.Array, scale: jax.Array, x: jax.Array) -> jax.Array:
+    """y[..., out] = dequant(int8 matmul). Per-tensor dynamic act quant."""
+    absmax = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))), 1e-8)
+    x_scale = absmax / 127.0
+    x_q = jnp.clip(jnp.round(x.astype(jnp.float32) / x_scale), -127, 127
+                   ).astype(jnp.int8)
+    acc = jax.lax.dot_general(
+        x_q, w_q, (((x.ndim - 1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    y = acc.astype(jnp.float32) * (scale.astype(jnp.float32) * x_scale)
+    return y.astype(x.dtype)
+
+
+def dense_weight(params: dict) -> jax.Array:
+    """Materialize the float [in, out] weight of a (possibly W8A8) linear."""
+    if "w" in params:
+        return params["w"]
+    return (params["w_q"].astype(jnp.float32)
+            * params["scale"][:, None].astype(jnp.float32)).T
+
+
+def init_linear(key: jax.Array, d_in: int, d_out: int, use_bias: bool,
+                dtype=jnp.bfloat16, scale: float | None = None) -> dict:
+    s = scale if scale is not None else d_in ** -0.5
+    p = {"w": (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)}
+    if use_bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# RoPE family
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(d_rot: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, d_rot, 2, jnp.float32) / d_rot))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float,
+               fraction: float = 1.0) -> jax.Array:
+    """x: [B, S, H, D]; positions: [B, S] int. Rotate the first
+    ``fraction * D`` dims (chatglm3 "2d rope" -> fraction=0.5)."""
+    d = x.shape[-1]
+    d_rot = int(d * fraction)
+    d_rot -= d_rot % 2
+    if d_rot == 0:
+        return x
+    freqs = rope_freqs(d_rot, theta)  # [d_rot/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, d_rot/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    xr, xp = x[..., :d_rot], x[..., d_rot:]
+    x1, x2 = xr[..., 0::2], xr[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    yr = jnp.stack([y1, y2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([yr.astype(x.dtype), xp], axis=-1)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float) -> jax.Array:
+    """Qwen2-VL M-RoPE: head dim split into 3 sections rotated by
+    (temporal, height, width) position streams. positions3: [3, B, S]."""
+    d = x.shape[-1]
+    sec = d // 3 - (d // 3) % 2
+    secs = [sec, sec, d - 2 * sec - (d - 2 * sec) % 2]
+    outs = []
+    off = 0
+    for i, ds in enumerate(secs):
+        part = x[..., off:off + ds]
+        outs.append(apply_rope(part, positions3[i], theta, fraction=1.0))
+        off += ds
+    if off < d:
+        outs.append(x[..., off:])
+    return jnp.concatenate(outs, axis=-1)
+
+
+def mrope_positions(batch: int, seq: int, n_vision: int) -> jax.Array:
+    """Stub M-RoPE position streams: vision tokens on a sqrt grid (t=0),
+    text tokens sequential in all three streams."""
+    import math
+
+    side = max(int(math.sqrt(max(n_vision, 1))), 1)
+    idx = jnp.arange(seq)
+    is_vis = idx < n_vision
+    t_pos = jnp.where(is_vis, 0, idx - n_vision + side)
+    h_pos = jnp.where(is_vis, idx // side, idx - n_vision + side)
+    w_pos = jnp.where(is_vis, idx % side, idx - n_vision + side)
+    pos = jnp.stack([t_pos, h_pos, w_pos])  # [3, S]
+    return jnp.broadcast_to(pos[:, None, :], (3, batch, seq))
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+
+def ffn(params: dict, x: jax.Array, gated: bool) -> jax.Array:
+    if gated:
+        g = linear(params["gate"], x)
+        u = linear(params["up"], x)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        h = jax.nn.gelu(linear(params["up"], x).astype(jnp.float32)
+                        ).astype(x.dtype)
+    return linear(params["down"], h)
+
+
+def init_ffn(key: jax.Array, cfg: ModelConfig, d_ff: int,
+             dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"up": init_linear(ks[0], cfg.d_model, d_ff, cfg.use_bias, dtype),
+         "down": init_linear(ks[1], d_ff, cfg.d_model, cfg.use_bias, dtype)}
+    if cfg.gated_ffn:
+        p["gate"] = init_linear(ks[2], cfg.d_model, d_ff, cfg.use_bias, dtype)
+    return p

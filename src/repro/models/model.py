@@ -1,0 +1,628 @@
+"""Unified functional model: init / forward / prefill / decode per family.
+
+Layer stacks are scanned (params stacked on a leading layer axis) so that
+lowering stays compact for 80-layer models.  Heterogeneous pieces (deepseek's
+first dense layer, zamba2's shared block and tail) are unstacked.
+
+Public API (all pure functions):
+    init_params(cfg, key, dtype, max_seq)        -> params
+    forward(params, cfg, tokens, extras)         -> logits [B, S, V]
+    init_cache(cfg, batch, max_seq, dtype)       -> cache
+    prefill(params, cfg, tokens, cache, extras)  -> (last_logits, cache)
+    decode_step(params, cfg, token, cache)       -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed import ctx
+from repro.models import blocks, moe as moe_mod, ssm as ssm_mod
+from repro.models.attention import chunked_attention
+from repro.models.layers import (ffn, init_ffn, init_linear, linear,
+                                 mrope_positions)
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _stack(trees: list):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _init_dense_layer(key, cfg: ModelConfig, dtype) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "attn_norm": blocks.init_norm(cfg, dtype),
+        "attn": blocks.init_attn(k1, cfg, dtype),
+        "ffn_norm": blocks.init_norm(cfg, dtype),
+        "ffn": init_ffn(k2, cfg, cfg.d_ff, dtype),
+    }
+
+
+def _init_moe_layer(key, cfg: ModelConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn_norm": blocks.init_norm(cfg, dtype),
+        "attn": blocks.init_attn(k1, cfg, dtype),
+        "ffn_norm": blocks.init_norm(cfg, dtype),
+        "moe": moe_mod.init_moe(k2, cfg, dtype),
+    }
+
+
+def _init_mla_layer(key, cfg: ModelConfig, dtype, dense_ffn: bool) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {
+        "attn_norm": blocks.init_norm(cfg, dtype),
+        "attn": blocks.init_mla(k1, cfg, dtype),
+        "ffn_norm": blocks.init_norm(cfg, dtype),
+    }
+    if dense_ffn:
+        p["ffn"] = init_ffn(k2, cfg, cfg.dense_d_ff, dtype)
+    else:
+        p["moe"] = moe_mod.init_moe(k2, cfg, dtype)
+    return p
+
+
+def _init_audio_dec_layer(key, cfg: ModelConfig, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "attn_norm": blocks.init_norm(cfg, dtype),
+        "attn": blocks.init_attn(k1, cfg, dtype),
+        "xattn_norm": blocks.init_norm(cfg, dtype),
+        "xattn": blocks.init_attn(k2, cfg, dtype),
+        "ffn_norm": blocks.init_norm(cfg, dtype),
+        "ffn": init_ffn(k3, cfg, cfg.d_ff, dtype),
+    }
+
+
+def init_params(cfg: ModelConfig, key: jax.Array, dtype=jnp.bfloat16,
+                max_seq: int = 4096) -> dict:
+    keys = jax.random.split(key, cfg.n_layers + 16)
+    p: dict = {}
+    p["embed"] = (jax.random.normal(keys[-1], (cfg.vocab_size, cfg.d_model),
+                                    jnp.float32) * 0.02).astype(dtype)
+    p["final_norm"] = blocks.init_norm(cfg, dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = init_linear(keys[-2], cfg.d_model, cfg.vocab_size,
+                                   False, dtype)
+    f = cfg.family
+    if f in ("dense", "vlm"):
+        p["layers"] = _stack([_init_dense_layer(keys[i], cfg, dtype)
+                              for i in range(cfg.n_layers)])
+    elif f == "moe":
+        p["layers"] = _stack([_init_moe_layer(keys[i], cfg, dtype)
+                              for i in range(cfg.n_layers)])
+    elif f == "mla_moe":
+        p["dense_layers"] = _stack(
+            [_init_mla_layer(keys[i], cfg, dtype, True)
+             for i in range(cfg.first_k_dense)])
+        p["layers"] = _stack(
+            [_init_mla_layer(keys[cfg.first_k_dense + i], cfg, dtype, False)
+             for i in range(cfg.n_layers - cfg.first_k_dense)])
+    elif f == "audio":
+        enc_cfg = dataclasses.replace(cfg, rope_mode="none")
+        p["enc_layers"] = _stack([_init_dense_layer(keys[i], enc_cfg, dtype)
+                                  for i in range(cfg.n_encoder_layers)])
+        p["layers"] = _stack(
+            [_init_audio_dec_layer(keys[cfg.n_encoder_layers + i], cfg, dtype)
+             for i in range(cfg.n_layers)])
+        p["enc_pos"] = (jax.random.normal(
+            keys[-3], (cfg.encoder_seq, cfg.d_model), jnp.float32) * 0.02
+            ).astype(dtype)
+        p["enc_final_norm"] = blocks.init_norm(cfg, dtype)
+    elif f == "hybrid":
+        every = cfg.shared_attn_every
+        n_groups = cfg.n_layers // every
+        tail = cfg.n_layers - n_groups * every
+        p["groups"] = _stack([
+            _stack([ssm_mod.init_mamba_block(
+                jax.random.fold_in(keys[gi], li), cfg, dtype)
+                for li in range(every)])
+            for gi in range(n_groups)])
+        p["tail"] = _stack([ssm_mod.init_mamba_block(keys[-4 - i], cfg, dtype)
+                            for i in range(tail)]) if tail else None
+        p["shared"] = _init_dense_layer(keys[-5], cfg, dtype)
+    elif f == "ssm":
+        p["layers"] = _stack([ssm_mod.init_mamba_block(keys[i], cfg, dtype)
+                              for i in range(cfg.n_layers)])
+    else:
+        raise ValueError(f)
+    if cfg.rope_mode == "learned":
+        p["pos_embed"] = (jax.random.normal(
+            keys[-6], (max_seq, cfg.d_model), jnp.float32) * 0.02).astype(dtype)
+    return p
+
+
+def lm_head(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = (x.astype(jnp.float32)
+                  @ params["embed"].T.astype(jnp.float32))
+    else:
+        from repro.models.layers import dense_weight
+        logits = x.astype(jnp.float32) @ dense_weight(
+            params["lm_head"]).astype(jnp.float32)
+    return ctx.constrain(logits, kind="logits")
+
+
+# ---------------------------------------------------------------------------
+# full-sequence layer applications (train / prefill): return cache entries
+# ---------------------------------------------------------------------------
+
+
+def _dense_layer_full(lp, x, cfg: ModelConfig, positions, causal=True):
+    h = blocks.norm(cfg, lp["attn_norm"], x)
+    attn_out, k, v = blocks.attn_full(lp["attn"], h, cfg, positions, causal)
+    if cfg.parallel_block:
+        f = ffn(lp["ffn"], h, cfg.gated_ffn)  # same normed input (command-r)
+        x = x + attn_out + f
+    else:
+        x = x + attn_out
+        x = x + ffn(lp["ffn"], blocks.norm(cfg, lp["ffn_norm"], x),
+                    cfg.gated_ffn)
+    return x, (k, v)
+
+
+def _moe_layer_full(lp, x, cfg: ModelConfig, positions):
+    h = blocks.norm(cfg, lp["attn_norm"], x)
+    attn_out, k, v = blocks.attn_full(lp["attn"], h, cfg, positions)
+    x = x + attn_out
+    x = x + moe_mod.moe_ffn(lp["moe"],
+                            blocks.norm(cfg, lp["ffn_norm"], x), cfg)
+    return x, (k, v)
+
+
+def _mla_layer_full(lp, x, cfg: ModelConfig, positions, dense: bool):
+    h = blocks.norm(cfg, lp["attn_norm"], x)
+    attn_out, ckv, krope = blocks.mla_full(lp["attn"], h, cfg, positions)
+    x = x + attn_out
+    h2 = blocks.norm(cfg, lp["ffn_norm"], x)
+    if dense:
+        x = x + ffn(lp["ffn"], h2, cfg.gated_ffn)
+    else:
+        x = x + moe_mod.moe_ffn(lp["moe"], h2, cfg)
+    return x, (ckv, krope)
+
+
+def _audio_dec_layer_full(lp, x, cfg: ModelConfig, positions, enc_out):
+    h = blocks.norm(cfg, lp["attn_norm"], x)
+    attn_out, k, v = blocks.attn_full(lp["attn"], h, cfg, positions)
+    x = x + attn_out
+    h = blocks.norm(cfg, lp["xattn_norm"], x)
+    xout, xk, xv = blocks.attn_full(lp["xattn"], h, cfg, positions,
+                                    causal=False, kv_override=enc_out)
+    x = x + xout
+    x = x + ffn(lp["ffn"], blocks.norm(cfg, lp["ffn_norm"], x), cfg.gated_ffn)
+    return x, (k, v, xk, xv)
+
+
+# ---------------------------------------------------------------------------
+# forward (train) / prefill
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def _embed_lookup(embed, tokens):
+    return embed[tokens]
+
+
+def _embed_lookup_fwd(embed, tokens):
+    # the embed residual is only used for shape/dtype (it's a live param, so
+    # keeping the reference costs nothing)
+    return embed[tokens], (tokens, embed)
+
+
+def _embed_lookup_bwd(res, ct):
+    """Keep the scatter-add cotangent sharded: without the constraints GSPMD
+    materializes the full [B,S,D] f32 cotangent replicated (22 GB/device on
+    command-r train_4k)."""
+    tokens, embed = res
+    ct = ctx.constrain(ct.astype(jnp.float32))
+    g = jnp.zeros(embed.shape, jnp.float32).at[tokens].add(ct)
+    return ctx.constrain(g, kind="embed").astype(embed.dtype), None
+
+
+_embed_lookup.defvjp(_embed_lookup_fwd, _embed_lookup_bwd)
+
+
+def _embed(params, cfg: ModelConfig, tokens, extras):
+    x = _embed_lookup(params["embed"], tokens)
+    if cfg.family == "vlm":
+        vis = extras["vision_embeds"].astype(x.dtype)
+        x = jnp.concatenate([vis, x], axis=1)
+    if cfg.rope_mode == "learned":
+        s = x.shape[1]
+        x = x + params["pos_embed"][:s][None]
+    return x
+
+
+def _positions(cfg: ModelConfig, batch, seq):
+    if cfg.rope_mode == "mrope":
+        return mrope_positions(batch, seq, cfg.n_vision_tokens)
+    return jnp.broadcast_to(jnp.arange(seq), (batch, seq))
+
+
+def _encode_audio(params, cfg: ModelConfig, frames):
+    """Whisper encoder over stub frame embeddings [B, Senc, D]."""
+    x = frames + params["enc_pos"][None, :frames.shape[1]]
+    pos = jnp.broadcast_to(jnp.arange(frames.shape[1]),
+                           (frames.shape[0], frames.shape[1]))
+
+    enc_cfg = dataclasses.replace(cfg, rope_mode="none")
+
+    @ctx.maybe_remat
+    def step(h, lp):
+        h, _ = _dense_layer_full(lp, h, enc_cfg, pos, causal=False)
+        return ctx.constrain(h), None
+
+    x, _ = ctx.scan(step, x, params["enc_layers"])
+    return blocks.norm(cfg, params["enc_final_norm"], x)
+
+
+def forward(params: dict, cfg: ModelConfig, tokens: jax.Array,
+            extras: dict | None = None) -> jax.Array:
+    """Teacher-forced full-sequence logits (training / eval)."""
+    extras = extras or {}
+    x = _embed(params, cfg, tokens, extras)
+    b, s = x.shape[0], x.shape[1]
+    positions = _positions(cfg, b, s)
+    f = cfg.family
+
+    x = ctx.constrain(x)
+    if f in ("dense", "vlm"):
+        @ctx.maybe_remat
+        def step(h, lp):
+            h, _ = _dense_layer_full(lp, h, cfg, positions)
+            return ctx.constrain(h), None
+        x, _ = ctx.scan(step, x, params["layers"])
+    elif f == "moe":
+        @ctx.maybe_remat
+        def step(h, lp):
+            h, _ = _moe_layer_full(lp, h, cfg, positions)
+            return ctx.constrain(h), None
+        x, _ = ctx.scan(step, x, params["layers"])
+    elif f == "mla_moe":
+        @ctx.maybe_remat
+        def dstep(h, lp):
+            h, _ = _mla_layer_full(lp, h, cfg, positions, dense=True)
+            return ctx.constrain(h), None
+        x, _ = ctx.scan(dstep, x, params["dense_layers"])
+
+        @ctx.maybe_remat
+        def mstep(h, lp):
+            h, _ = _mla_layer_full(lp, h, cfg, positions, dense=False)
+            return ctx.constrain(h), None
+        x, _ = ctx.scan(mstep, x, params["layers"])
+    elif f == "audio":
+        enc_out = _encode_audio(params, cfg, extras["frames"])
+
+        @ctx.maybe_remat
+        def step(h, lp):
+            h, _ = _audio_dec_layer_full(lp, h, cfg, positions, enc_out)
+            return ctx.constrain(h), None
+        x, _ = ctx.scan(step, x, params["layers"])
+    elif f == "hybrid":
+        @ctx.maybe_remat
+        def mamba_step(h, lp):
+            out, _ = ssm_mod.mamba_block(lp, h, cfg)
+            return ctx.constrain(h + out), None
+
+        def group_step(h, gp):
+            h, _ = ctx.scan(mamba_step, h, gp)
+            h, _ = _dense_layer_full(params["shared"], h, cfg, positions)
+            return ctx.constrain(h), None
+        x, _ = ctx.scan(group_step, x, params["groups"])
+        if params.get("tail") is not None:
+            x, _ = ctx.scan(mamba_step, x, params["tail"])
+    elif f == "ssm":
+        @ctx.maybe_remat
+        def step(h, lp):
+            out, _ = ssm_mod.mamba_block(lp, h, cfg)
+            return ctx.constrain(h + out), None
+        x, _ = ctx.scan(step, x, params["layers"])
+    else:
+        raise ValueError(f)
+
+    x = blocks.norm(cfg, params["final_norm"], x)
+    return lm_head(params, cfg, x)
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> dict:
+    f = cfg.family
+    if f in ("dense", "vlm", "moe"):
+        shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.d_head)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+                "len": jnp.zeros((), jnp.int32)}
+    if f == "mla_moe":
+        nl = cfg.n_layers
+        return {
+            "ckv": jnp.zeros((nl, batch, max_seq, cfg.kv_lora_rank), dtype),
+            "krope": jnp.zeros((nl, batch, max_seq, cfg.qk_rope_dim), dtype),
+            "len": jnp.zeros((), jnp.int32)}
+    if f == "audio":
+        nl = cfg.n_layers
+        kv = (nl, batch, max_seq, cfg.n_kv_heads, cfg.d_head)
+        xkv = (nl, batch, cfg.encoder_seq, cfg.n_kv_heads, cfg.d_head)
+        return {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype),
+                "xk": jnp.zeros(xkv, dtype), "xv": jnp.zeros(xkv, dtype),
+                "len": jnp.zeros((), jnp.int32)}
+    if f == "hybrid":
+        every = cfg.shared_attn_every
+        n_groups = cfg.n_layers // every
+        tail = cfg.n_layers - n_groups * every
+        one = ssm_mod.init_mamba_cache(cfg, batch, dtype)
+
+        def rep(tree, *dims):
+            return jax.tree.map(
+                lambda a: jnp.zeros(tuple(dims) + a.shape, a.dtype), tree)
+        kv = (n_groups, batch, max_seq, cfg.n_kv_heads, cfg.d_head)
+        return {"mamba": rep(one, n_groups, every),
+                "tail": rep(one, tail) if tail else None,
+                "k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype),
+                "len": jnp.zeros((), jnp.int32)}
+    if f == "ssm":
+        one = ssm_mod.init_mamba_cache(cfg, batch, dtype)
+        return {"layers": jax.tree.map(
+            lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), one),
+            "len": jnp.zeros((), jnp.int32)}
+    raise ValueError(f)
+
+
+# ---------------------------------------------------------------------------
+# prefill: full-sequence pass that also fills the cache
+# ---------------------------------------------------------------------------
+
+
+def _pad_seq(arr, max_seq, axis=2):
+    pad = max_seq - arr.shape[axis]
+    if pad <= 0:
+        return arr
+    widths = [(0, 0)] * arr.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(arr, widths)
+
+
+def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, cache: dict,
+            extras: dict | None = None) -> tuple[jax.Array, dict]:
+    """Process the prompt; returns (last-position logits [B, V], cache)."""
+    extras = extras or {}
+    x = _embed(params, cfg, tokens, extras)
+    b, s = x.shape[0], x.shape[1]
+    max_seq = _cache_max_seq(cfg, cache)
+    positions = _positions(cfg, b, s)
+    f = cfg.family
+
+    if f in ("dense", "vlm", "moe"):
+        layer_full = _moe_layer_full if f == "moe" else _dense_layer_full
+
+        def step(h, xs):
+            lp, _ = xs
+            h, (k, v) = layer_full(lp, h, cfg, positions)
+            return h, (_pad_seq(k.astype(cache["k"].dtype), max_seq, 1),
+                       _pad_seq(v.astype(cache["v"].dtype), max_seq, 1))
+        x, (ks, vs) = ctx.scan(step, x, (params["layers"], None))
+        cache = {**cache, "k": ks, "v": vs,
+                 "len": jnp.asarray(s, jnp.int32)}
+    elif f == "mla_moe":
+        all_ckv, all_krope = [], []
+
+        def dstep(h, lp):
+            h, (ckv, krope) = _mla_layer_full(lp, h, cfg, positions, True)
+            return h, (ckv, krope)
+        x, (ckv_d, krope_d) = ctx.scan(dstep, x, params["dense_layers"])
+
+        def mstep(h, lp):
+            h, (ckv, krope) = _mla_layer_full(lp, h, cfg, positions, False)
+            return h, (ckv, krope)
+        x, (ckv_m, krope_m) = ctx.scan(mstep, x, params["layers"])
+        ckv = jnp.concatenate([ckv_d, ckv_m], 0)
+        krope = jnp.concatenate([krope_d, krope_m], 0)
+        cache = {**cache,
+                 "ckv": _pad_seq(ckv.astype(cache["ckv"].dtype), max_seq),
+                 "krope": _pad_seq(krope.astype(cache["krope"].dtype), max_seq),
+                 "len": jnp.asarray(s, jnp.int32)}
+    elif f == "audio":
+        enc_out = _encode_audio(params, cfg, extras["frames"])
+
+        def step(h, lp):
+            h, (k, v, xk, xv) = _audio_dec_layer_full(lp, h, cfg, positions,
+                                                      enc_out)
+            return h, (k, v, xk, xv)
+        x, (ks, vs, xks, xvs) = ctx.scan(step, x, params["layers"])
+        cache = {**cache,
+                 "k": _pad_seq(ks.astype(cache["k"].dtype), max_seq),
+                 "v": _pad_seq(vs.astype(cache["v"].dtype), max_seq),
+                 "xk": xks.astype(cache["xk"].dtype),
+                 "xv": xvs.astype(cache["xv"].dtype),
+                 "len": jnp.asarray(s, jnp.int32)}
+    elif f == "hybrid":
+        def mamba_step(h, xs):
+            lp, _ = xs
+            out, state = ssm_mod.mamba_block(lp, h, cfg)
+            conv_tail = _conv_tail(h, lp, cfg)
+            return h + out, {"conv": conv_tail, "state": state}
+
+        def group_step(h, xs):
+            gp, _ = xs
+            h, mcache = ctx.scan(mamba_step, h, (gp, None))
+            h, (k, v) = _dense_layer_full(params["shared"], h, cfg, positions)
+            return h, (mcache, _pad_seq(k.astype(cache["k"].dtype), max_seq, 1),
+                       _pad_seq(v.astype(cache["v"].dtype), max_seq, 1))
+        x, (mcaches, ks, vs) = ctx.scan(group_step, x,
+                                            (params["groups"], None))
+        tail_cache = cache["tail"]
+        if params.get("tail") is not None:
+            x, tail_cache = ctx.scan(mamba_step, x, (params["tail"], None))
+        cache = {"mamba": mcaches, "tail": tail_cache, "k": ks, "v": vs,
+                 "len": jnp.asarray(s, jnp.int32)}
+    elif f == "ssm":
+        def step(h, xs):
+            lp, _ = xs
+            out, state = ssm_mod.mamba_block(lp, h, cfg)
+            conv_tail = _conv_tail(h, lp, cfg)
+            return h + out, {"conv": conv_tail, "state": state}
+        x, lcache = ctx.scan(step, x, (params["layers"], None))
+        cache = {"layers": lcache, "len": jnp.asarray(s, jnp.int32)}
+    else:
+        raise ValueError(f)
+
+    x_last = blocks.norm(cfg, params["final_norm"], x[:, -1])
+    return lm_head(params, cfg, x_last), cache
+
+
+def _conv_tail(h, lp, cfg: ModelConfig):
+    """Last K-1 conv inputs of the sequence (pre-activation), for decode."""
+    z_xbc_dt = linear(lp["in_proj"], h[:, -(cfg.ssm_conv - 1):, :])
+    d_in = cfg.d_inner
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    xbc = z_xbc_dt[..., d_in:d_in + d_in + 2 * g * n]
+    return xbc
+
+
+def _cache_max_seq(cfg: ModelConfig, cache: dict) -> int:
+    if cfg.family in ("dense", "vlm", "moe", "audio", "hybrid"):
+        return cache["k"].shape[-3]
+    if cfg.family == "mla_moe":
+        return cache["ckv"].shape[-2]
+    return 0
+
+
+# ---------------------------------------------------------------------------
+# decode: one token through the whole stack
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params: dict, cfg: ModelConfig, token: jax.Array,
+                cache: dict) -> tuple[jax.Array, dict]:
+    """token: int32 [B]. Returns (logits [B, V], updated cache)."""
+    x = params["embed"][token]
+    pos = cache["len"]
+    if cfg.rope_mode == "learned":
+        x = x + params["pos_embed"][pos]
+    f = cfg.family
+
+    if f in ("dense", "vlm", "moe"):
+        mesh = ctx.mesh()
+        use_splitk = (
+            mesh is not None and "model" in mesh.shape
+            and cfg.n_kv_heads % mesh.shape["model"] != 0)
+        if use_splitk:
+            from repro.distributed.sharding import batch_pspec
+            batch_axes = batch_pspec(mesh, x.shape[0], 1)[0]
+
+        def step(h, xs):
+            lp, kc, vc = xs
+            hn = blocks.norm(cfg, lp["attn_norm"], h)
+            if use_splitk:
+                attn_out, kc, vc = blocks.attn_decode_sharded(
+                    lp["attn"], hn, cfg, kc, vc, pos, mesh, batch_axes)
+            else:
+                attn_out, kc, vc = blocks.attn_decode(lp["attn"], hn, cfg,
+                                                      kc, vc, pos)
+            if cfg.parallel_block:
+                fo = ffn(lp["ffn"], hn, cfg.gated_ffn)
+                h = h + attn_out + fo
+            else:
+                h = h + attn_out
+                hn2 = blocks.norm(cfg, lp["ffn_norm"], h)
+                if f == "moe":
+                    h = h + moe_mod.moe_ffn(lp["moe"], hn2[:, None], cfg)[:, 0]
+                else:
+                    h = h + ffn(lp["ffn"], hn2, cfg.gated_ffn)
+            return h, (kc, vc)
+        x, (ks, vs) = ctx.scan(step, x,
+                                   (params["layers"], cache["k"], cache["v"]))
+        cache = {**cache, "k": ks, "v": vs, "len": pos + 1}
+    elif f == "mla_moe":
+        def make_step(dense):
+            def step(h, xs):
+                lp, ckv, krope = xs
+                hn = blocks.norm(cfg, lp["attn_norm"], h)
+                attn_out, ckv, krope = blocks.mla_decode(lp["attn"], hn, cfg,
+                                                         ckv, krope, pos)
+                h = h + attn_out
+                hn2 = blocks.norm(cfg, lp["ffn_norm"], h)
+                if dense:
+                    h = h + ffn(lp["ffn"], hn2, cfg.gated_ffn)
+                else:
+                    h = h + moe_mod.moe_ffn(lp["moe"], hn2[:, None], cfg)[:, 0]
+                return h, (ckv, krope)
+            return step
+        kd = cfg.first_k_dense
+        x, (ckv_d, kr_d) = ctx.scan(
+            make_step(True), x,
+            (params["dense_layers"], cache["ckv"][:kd], cache["krope"][:kd]))
+        x, (ckv_m, kr_m) = ctx.scan(
+            make_step(False), x,
+            (params["layers"], cache["ckv"][kd:], cache["krope"][kd:]))
+        cache = {**cache,
+                 "ckv": jnp.concatenate([ckv_d, ckv_m], 0),
+                 "krope": jnp.concatenate([kr_d, kr_m], 0),
+                 "len": pos + 1}
+    elif f == "audio":
+        def step(h, xs):
+            lp, kc, vc, xk, xv = xs
+            hn = blocks.norm(cfg, lp["attn_norm"], h)
+            attn_out, kc, vc = blocks.attn_decode(lp["attn"], hn, cfg, kc, vc,
+                                                  pos)
+            h = h + attn_out
+            hn = blocks.norm(cfg, lp["xattn_norm"], h)
+            h = h + blocks.cross_attn_decode(lp["xattn"], hn, cfg, xk, xv,
+                                             cfg.encoder_seq)
+            h = h + ffn(lp["ffn"], blocks.norm(cfg, lp["ffn_norm"], h),
+                        cfg.gated_ffn)
+            return h, (kc, vc)
+        x, (ks, vs) = ctx.scan(
+            step, x, (params["layers"], cache["k"], cache["v"],
+                      cache["xk"], cache["xv"]))
+        cache = {**cache, "k": ks, "v": vs, "len": pos + 1}
+    elif f == "hybrid":
+        def mamba_step(h, xs):
+            lp, mc = xs
+            out, mc = ssm_mod.mamba_decode_step(lp, h, mc, cfg)
+            return h + out, mc
+
+        def group_step(h, xs):
+            gp, mc, kc, vc = xs
+            h, mc = ctx.scan(mamba_step, h, (gp, mc))
+            hn = blocks.norm(cfg, params["shared"]["attn_norm"], h)
+            attn_out, kc, vc = blocks.attn_decode(params["shared"]["attn"],
+                                                  hn, cfg, kc, vc, pos)
+            h = h + attn_out
+            h = h + ffn(params["shared"]["ffn"],
+                        blocks.norm(cfg, params["shared"]["ffn_norm"], h),
+                        cfg.gated_ffn)
+            return h, (mc, kc, vc)
+        x, (mcaches, ks, vs) = ctx.scan(
+            group_step, x,
+            (params["groups"], cache["mamba"], cache["k"], cache["v"]))
+        tail_cache = cache["tail"]
+        if params.get("tail") is not None:
+            x, tail_cache = ctx.scan(mamba_step, x,
+                                         (params["tail"], cache["tail"]))
+        cache = {"mamba": mcaches, "tail": tail_cache, "k": ks, "v": vs,
+                 "len": pos + 1}
+    elif f == "ssm":
+        def step(h, xs):
+            lp, mc = xs
+            out, mc = ssm_mod.mamba_decode_step(lp, h, mc, cfg)
+            return h + out, mc
+        x, lcache = ctx.scan(step, x, (params["layers"], cache["layers"]))
+        cache = {"layers": lcache, "len": pos + 1}
+    else:
+        raise ValueError(f)
+
+    x = blocks.norm(cfg, params["final_norm"], x)
+    return lm_head(params, cfg, x), cache

@@ -1,0 +1,200 @@
+"""Mamba-2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Chunked SSD for train/prefill (quadratic within chunks, linear across) and a
+constant-memory recurrent step for decode — this is what makes the
+``long_500k`` cells runnable for the ssm/hybrid architectures.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import init_linear, linear, rms_norm
+
+NEG_INF = -1e30
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: [..., T] -> lower-triangular pairwise sums a[i..j) as [..., T, T]."""
+    t = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    return jnp.where(mask, diff, NEG_INF)
+
+
+def ssd_chunked(x: jax.Array, a: jax.Array, b_mat: jax.Array, c_mat: jax.Array,
+                chunk: int = 128,
+                init_state: jax.Array | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """SSD scan. x: [B,S,H,P]; a: [B,S,H] (log decay = dt*A, negative);
+    b_mat/c_mat: [B,S,G,N]. Returns (y [B,S,H,P], final_state [B,H,P,N])."""
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = x.shape[1] // chunk
+    rep = h // g
+    xc = x.reshape(bsz, nc, chunk, h, p)
+    ac = a.reshape(bsz, nc, chunk, h).transpose(0, 3, 1, 2)  # [B,H,C,Q]
+    bc = jnp.repeat(b_mat.reshape(bsz, nc, chunk, g, n), rep, axis=3)
+    cc = jnp.repeat(c_mat.reshape(bsz, nc, chunk, g, n), rep, axis=3)
+
+    a_cumsum = jnp.cumsum(ac, axis=-1)  # [B,H,C,Q]
+    # 1) intra-chunk (the "duality" quadratic part)
+    ell = jnp.exp(_segsum(ac))  # [B,H,C,Q,Q]
+    y_diag = jnp.einsum("bclhn,bcshn,bhcls,bcshp->bclhp",
+                        cc.astype(jnp.float32), bc.astype(jnp.float32),
+                        ell.astype(jnp.float32), xc.astype(jnp.float32))
+    # 2) chunk summaries
+    decay_states = jnp.exp(a_cumsum[..., -1:] - a_cumsum)  # [B,H,C,Q]
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn",
+                        bc.astype(jnp.float32), decay_states.astype(jnp.float32),
+                        xc.astype(jnp.float32))
+    # 3) inter-chunk recurrence
+    chunk_decay = jnp.exp(a_cumsum[..., -1])  # [B,H,C]
+    s0 = (jnp.zeros((bsz, h, p, n), jnp.float32)
+          if init_state is None else init_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st, dec = inp  # st: [B,H,P,N], dec: [B,H]
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit the state *entering* this chunk
+
+    (final_state, prev_states) = jax.lax.scan(
+        step, s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(2, 0, 1)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # [B,C,H,P,N]
+    # 4) inter-chunk contribution
+    state_decay = jnp.exp(a_cumsum)  # [B,H,C,Q]
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp",
+                       cc.astype(jnp.float32), prev_states,
+                       state_decay.astype(jnp.float32))
+    y = (y_diag + y_off).reshape(bsz, nc * chunk, h, p)
+    return y[:, :s].astype(x.dtype), final_state
+
+
+def ssd_decode_step(state: jax.Array, x: jax.Array, a: jax.Array,
+                    b_mat: jax.Array, c_mat: jax.Array
+                    ) -> tuple[jax.Array, jax.Array]:
+    """One recurrent step. state: [B,H,P,N]; x: [B,H,P]; a: [B,H];
+    b_mat/c_mat: [B,G,N]. Returns (y [B,H,P], new_state)."""
+    h, g = x.shape[1], b_mat.shape[1]
+    rep = h // g
+    bb = jnp.repeat(b_mat, rep, axis=1).astype(jnp.float32)  # [B,H,N]
+    cc = jnp.repeat(c_mat, rep, axis=1).astype(jnp.float32)
+    new_state = (state * jnp.exp(a.astype(jnp.float32))[..., None, None]
+                 + jnp.einsum("bhp,bhn->bhpn", x.astype(jnp.float32), bb))
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, cc)
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba-2 block
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_block(key: jax.Array, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
+    d_in = cfg.d_inner
+    g, n, hh = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    conv_ch = d_in + 2 * g * n
+    proj_out = 2 * d_in + 2 * g * n + hh
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": init_linear(ks[0], cfg.d_model, proj_out, False, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_ch),
+                                     jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "dt_bias": jnp.zeros((hh,), jnp.float32),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, hh, dtype=jnp.float32)),
+        "d_skip": jnp.ones((hh,), jnp.float32),
+        "norm": jnp.ones((d_in,), dtype),
+        "out_proj": init_linear(ks[2], d_in, cfg.d_model, False, dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    d_in = cfg.d_inner
+    g, n, hh = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, d_in + d_in + 2 * g * n], axis=-1)
+    return z, xbc, dt  # xbc still fused for the conv
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over [B, S, C] with kernel [K, C]."""
+    k = w.shape[0]
+    xp = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(k))
+    return jax.nn.silu((out + b[None, None, :]).astype(jnp.float32)
+                       ).astype(xbc.dtype)
+
+
+def mamba_block(params: dict, x: jax.Array, cfg: ModelConfig,
+                chunk: int = 128,
+                init_state: jax.Array | None = None
+                ) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence mamba2 block. x: [B, S, D] -> ([B, S, D], final_state)."""
+    d_in = cfg.d_inner
+    g, n, hh, p = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    bsz, s, _ = x.shape
+    z, xbc, dt = _split_proj(cfg, linear(params["in_proj"], x))
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xs, b_mat, c_mat = jnp.split(xbc, [d_in, d_in + g * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,S,H]
+    a = -jnp.exp(params["a_log"])[None, None, :] * dt  # log decay, negative
+    xh = xs.reshape(bsz, s, hh, p)
+    xin = xh * dt[..., None].astype(xh.dtype)
+    y, state = ssd_chunked(xin, a, b_mat.reshape(bsz, s, g, n),
+                           c_mat.reshape(bsz, s, g, n), chunk,
+                           init_state=init_state)
+    y = y + xh * params["d_skip"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(bsz, s, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    return linear(params["out_proj"], y), state
+
+
+def mamba_decode_step(params: dict, x: jax.Array, cache: dict,
+                      cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    """One-token step. x: [B, D]; cache: {"conv": [B,K-1,C], "state": [B,H,P,N]}."""
+    d_in = cfg.d_inner
+    g, n, hh, p = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    bsz = x.shape[0]
+    z, xbc, dt = _split_proj(cfg, linear(params["in_proj"], x))
+    window = jnp.concatenate([cache["conv"], xbc[:, None, :]], axis=1)  # [B,K,C]
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          params["conv_w"].astype(jnp.float32))
+    xbc = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32)
+                      ).astype(x.dtype)
+    new_conv = window[:, 1:, :]
+    xs, b_mat, c_mat = jnp.split(xbc, [d_in, d_in + g * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,H]
+    a = -jnp.exp(params["a_log"])[None, :] * dt
+    xh = xs.reshape(bsz, hh, p) * dt[..., None].astype(x.dtype)
+    y, new_state = ssd_decode_step(cache["state"], xh, a,
+                                   b_mat.reshape(bsz, g, n),
+                                   c_mat.reshape(bsz, g, n))
+    y = y + xs.reshape(bsz, hh, p) * params["d_skip"][None, :, None].astype(x.dtype)
+    y = y.reshape(bsz, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rms_norm(y, params["norm"], cfg.norm_eps)
+    return linear(params["out_proj"], y), {"conv": new_conv, "state": new_state}
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    d_in = cfg.d_inner
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    conv_ch = d_in + 2 * g * n
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        "state": jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_headdim, n),
+                           jnp.float32),
+    }

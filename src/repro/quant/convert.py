@@ -1,0 +1,40 @@
+"""Convert float model params to W8A8 serving form (paper's deployment mode).
+
+Every linear param dict ``{"w": [..., in, out]}`` becomes
+``{"w_q": int8 [..., out, in], "scale": f32 [..., out]}`` (bias preserved).
+Kept in bf16 (documented): embeddings (row-gather, also the tied LM head),
+MoE routed-expert stacks (ragged_dot path), mamba conv/ssm vectors, norms.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize_w(w: jax.Array) -> dict:
+    wt = jnp.swapaxes(w.astype(jnp.float32), -1, -2)  # [..., out, in]
+    absmax = jnp.max(jnp.abs(wt), axis=-1)
+    scale = jnp.maximum(absmax / 127.0, 1e-8)
+    w_q = jnp.clip(jnp.round(wt / scale[..., None]), -127, 127).astype(jnp.int8)
+    return {"w_q": w_q, "scale": scale.astype(jnp.float32)}
+
+
+def quantize_params(params):
+    """Recursively rewrite linear dicts into W8A8 form.
+
+    Routers stay full precision (routing decisions are notoriously
+    quantization-sensitive; their weights are negligible)."""
+    if isinstance(params, dict):
+        if "w" in params and isinstance(params["w"], (jax.Array, jax.ShapeDtypeStruct)) \
+                and getattr(params["w"], "ndim", 0) >= 2:
+            out = _quantize_w(params["w"])
+            for k, v in params.items():
+                if k != "w":
+                    out[k] = v
+            return out
+        return {k: (v if k == "router" else quantize_params(v))
+                for k, v in params.items()}
+    if isinstance(params, (list, tuple)):
+        return type(params)(quantize_params(v) for v in params)
+    return params

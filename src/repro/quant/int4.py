@@ -1,0 +1,64 @@
+"""W4A16 quantization (paper §VIII-B / Fig. 11): 4-bit packed weights with
+group-wise scales, 16-bit activations."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+GROUP = 128
+
+
+class QuantizedLinear4(NamedTuple):
+    w_packed: jax.Array  # uint8 [h, w//2] — two nibbles per byte
+    scale: jax.Array     # f32  [h, w//GROUP] group-wise
+    h: int
+    w: int
+
+
+def pack_nibbles(w_q: jax.Array) -> jax.Array:
+    """int4 values in int8 storage [-8..7] -> packed uint8 pairs."""
+    u = (w_q + 8).astype(jnp.uint8)  # [0..15]
+    lo = u[:, 0::2]
+    hi = u[:, 1::2]
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack_nibbles(packed: jax.Array) -> jax.Array:
+    lo = (packed & 0xF).astype(jnp.int8) - 8
+    hi = ((packed >> 4) & 0xF).astype(jnp.int8) - 8
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(packed.shape[0], -1)
+
+
+def quantize_weight4(w: jax.Array, group: int = GROUP) -> QuantizedLinear4:
+    h, width = w.shape
+    assert width % 2 == 0
+    g = min(group, width)
+    ng = -(-width // g)
+    pad = ng * g - width
+    wp = jnp.pad(w, ((0, 0), (0, pad)))
+    wg = wp.reshape(h, ng, g)
+    absmax = jnp.max(jnp.abs(wg), axis=2, keepdims=True)
+    scale = jnp.maximum(absmax / 7.0, 1e-8)
+    w_q = jnp.clip(jnp.round(wg / scale), -8, 7).astype(jnp.int8)
+    w_q = w_q.reshape(h, ng * g)[:, :width]
+    return QuantizedLinear4(w_packed=pack_nibbles(w_q),
+                            scale=scale[:, :, 0].astype(jnp.float32), h=h, w=width)
+
+
+def dequantize4(q: QuantizedLinear4, group: int = GROUP) -> jax.Array:
+    w_q = unpack_nibbles(q.w_packed)[:, :q.w].astype(jnp.float32)
+    g = min(group, q.w)
+    ng = q.scale.shape[1]
+    pad = ng * g - q.w
+    w_q = jnp.pad(w_q, ((0, 0), (0, pad))).reshape(q.h, ng, g)
+    w = w_q * q.scale[:, :, None]
+    return w.reshape(q.h, ng * g)[:, :q.w]
+
+
+def int4_matvec(q: QuantizedLinear4, x: jax.Array) -> jax.Array:
+    """W4A16: dequantize-on-the-fly GeMV with bf16/f32 activations."""
+    return dequantize4(q) @ x.astype(jnp.float32)

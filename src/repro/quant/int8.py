@@ -1,0 +1,52 @@
+"""W8A8 symmetric quantization (paper default; SmoothQuant-style offline).
+
+Per-output-channel weight scales; per-tensor dynamic activation scale.
+All computations accumulate in int32 and dequantize at the end, mirroring the
+flash compute core's INT8 MACs (paper §IV-B).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class QuantizedLinear(NamedTuple):
+    w_q: jax.Array    # int8 [h, w]
+    scale: jax.Array  # f32 [h] per-output-channel
+
+
+def quantize_weight(w: jax.Array) -> QuantizedLinear:
+    """w: [h, w] float -> int8 with per-row symmetric scale."""
+    absmax = jnp.max(jnp.abs(w), axis=1, keepdims=True)
+    scale = jnp.maximum(absmax / 127.0, 1e-8)
+    w_q = jnp.clip(jnp.round(w / scale), -127, 127).astype(jnp.int8)
+    return QuantizedLinear(w_q=w_q, scale=scale[:, 0].astype(jnp.float32))
+
+
+def quantize_activation(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """x: [..., w] float -> (int8, per-tensor scale)."""
+    absmax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(absmax / 127.0, 1e-8)
+    x_q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return x_q, scale.astype(jnp.float32)
+
+
+def dequantize(w_q: jax.Array, scale: jax.Array) -> jax.Array:
+    return w_q.astype(jnp.float32) * scale[:, None]
+
+
+def int8_matvec(q: QuantizedLinear, x: jax.Array) -> jax.Array:
+    """W8A8 GeMV: int8 x int8 -> int32 accumulate -> f32 dequant."""
+    x_q, x_scale = quantize_activation(x)
+    acc = jax.lax.dot_general(
+        q.w_q.astype(jnp.int32), x_q.astype(jnp.int32),
+        (((1,), (0,)), ((), ())))
+    return acc.astype(jnp.float32) * q.scale * x_scale
+
+
+def quantization_mse(w: jax.Array) -> jax.Array:
+    q = quantize_weight(w)
+    return jnp.mean((dequantize(q.w_q, q.scale) - w) ** 2)

@@ -1,0 +1,29 @@
+"""Token samplers (greedy / temperature / top-k / top-p)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def greedy(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample(logits: jax.Array, key: jax.Array, temperature: float = 1.0,
+           top_k: int = 0, top_p: float = 1.0) -> jax.Array:
+    """logits: [B, V] -> tokens [B]."""
+    if temperature <= 0.0:
+        return greedy(logits)
+    logits = logits.astype(jnp.float32) / temperature
+    if top_k:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -1e30, logits)
+    if top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        cutoff_idx = jnp.sum(cum < top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+        logits = jnp.where(logits < cutoff, -1e30, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

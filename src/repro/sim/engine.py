@@ -1,0 +1,298 @@
+"""Event-driven flash-channel simulator (SSDsim-style, per paper §VII-A).
+
+Channels are symmetric: we simulate one channel's bus + die pool exactly and
+read the matrix completion time off it.  The model captures the paper's
+pipeline (Fig. 6): read-compute input transfers, ~tR in-die windows, result
+uploads, and plain reads either whole-page (blocking) or sliced into the
+bubbles.
+
+Resources on a channel:
+  * the bus — serializes every transfer (rc inputs, rc results, read slices);
+  * the die pool — a tile's array-read+compute occupies all dies for tR
+    (all compute cores cooperate on one tile; the two-plane data/cache
+    register pipeline lets the next tile's array read overlap the bus phase,
+    which is captured by allowing the next tile's input transfer during the
+    current tile's tR window);
+  * NPU-bound reads use any idle plane, so they do not contend for dies in
+    this model (the idle plane serves them, per §IV-C "the idle plane serves
+    normal read requests"), only for the bus.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.schedule import (DEFAULT_SLICE_BYTES, ChannelWorkload, Policy)
+
+
+@dataclasses.dataclass
+class BusSegment:
+    start: float
+    end: float
+    kind: str  # "rc_in" | "rc_out" | "read"
+
+
+@dataclasses.dataclass
+class SimResult:
+    time: float                  # matrix completion time (all rc + all reads)
+    rc_done: float               # last read-compute completion
+    reads_done: float            # last NPU-bound byte delivered
+    bus_busy: float              # total bus-occupied seconds
+    util: float                  # bus_busy / time
+    segments: list[BusSegment]   # trace (for Fig-6 style plots)
+
+
+def simulate_channel(w: ChannelWorkload, policy: Policy = Policy.RC_SLICED,
+                     slice_bytes: int = DEFAULT_SLICE_BYTES,
+                     keep_trace: bool = False) -> SimResult:
+    """Simulate one channel processing ``w``; returns completion stats.
+
+    Event structure per read-compute request i:
+      input transfer  [s_i, s_i + t_in]   (bus)
+      die window      [s_i + t_in, s_i + t_in + tR]   (dies, all of them)
+      result transfer [die_end, die_end + t_out]      (bus, priority)
+    Reads fill bus gaps: whole pages (RC_UNSLICED) or slices (RC_SLICED).
+    Read data is produced by idle planes; we assume a page is ready whenever
+    the bus can take it (array reads overlap earlier traffic), which matches
+    the paper's steady-state pipeline.
+    """
+    t_in = w.rc_input_bytes / w.bw
+    t_out = w.rc_result_bytes / w.bw
+    t_slice = slice_bytes / w.bw
+    t_page = w.page_bytes / w.bw
+
+    segments: list[BusSegment] = []
+    bus_busy = 0.0
+
+    def occupy(start: float, dur: float, kind: str) -> float:
+        nonlocal bus_busy
+        bus_busy += dur
+        if keep_trace:
+            segments.append(BusSegment(start, start + dur, kind))
+        return start + dur
+
+    # Pending read bytes for the NPU.
+    read_bytes_left = w.n_reads * w.page_bytes if policy != Policy.RC_ONLY else 0.0
+    reads_done_at = 0.0
+
+    bus_free = 0.0      # earliest time the bus is available
+    dies_free = 0.0     # earliest time the die pool can start a new tile
+    rc_done = 0.0
+
+    for _ in range(w.n_tiles):
+        # Input transfer: needs the bus; the die pool must be free by the time
+        # the transfer completes (two-plane pipelining lets transfer overlap
+        # the previous tile's die window).
+        start_in = max(bus_free, dies_free - t_in)
+        # RC_UNSLICED: a whole-page read may be occupying the bus (head-of-line
+        # blocking). Interleave: before each rc input, if reads remain, one
+        # full page transfer goes out first (paper Fig. 6b's interleaving).
+        if policy == Policy.RC_UNSLICED and read_bytes_left > 0:
+            bus_free = occupy(bus_free, t_page, "read")
+            read_bytes_left -= w.page_bytes
+            reads_done_at = bus_free
+            start_in = max(bus_free, dies_free - t_in)
+        if policy == Policy.RC_SLICED and read_bytes_left > 0:
+            # Fill the gap [bus_free, start_in] with read slices.
+            gap = start_in - bus_free
+            n_fit = int(gap / t_slice)
+            n_have = int(-(-read_bytes_left // slice_bytes))
+            n = min(n_fit, n_have)
+            if n > 0:
+                t = bus_free
+                for _s in range(n):
+                    t = occupy(t, t_slice, "read")
+                read_bytes_left -= n * slice_bytes
+                reads_done_at = t
+                bus_free = t
+                start_in = max(bus_free, dies_free - t_in)
+        end_in = occupy(start_in, t_in, "rc_in")
+        bus_free = end_in
+        die_start = max(end_in, dies_free)
+        die_end = die_start + w.t_r
+        dies_free = die_end
+        # Result upload has priority at die_end, but slices may use the bubble
+        # [end_in, die_end] first.
+        if policy == Policy.RC_SLICED and read_bytes_left > 0:
+            gap = die_end - bus_free
+            n_fit = int(gap / t_slice)
+            n_have = int(-(-read_bytes_left // slice_bytes))
+            n = min(n_fit, n_have)
+            if n > 0:
+                t = bus_free
+                for _s in range(n):
+                    t = occupy(t, t_slice, "read")
+                read_bytes_left -= n * slice_bytes
+                reads_done_at = t
+                bus_free = t
+        start_out = max(bus_free, die_end)
+        bus_free = occupy(start_out, t_out, "rc_out")
+        rc_done = bus_free
+
+    # Drain remaining reads after the last rc request.
+    while read_bytes_left > 0:
+        step = min(slice_bytes if policy == Policy.RC_SLICED else w.page_bytes,
+                   read_bytes_left)
+        bus_free = occupy(bus_free, step / w.bw, "read")
+        read_bytes_left -= step
+        reads_done_at = bus_free
+
+    total = max(rc_done, reads_done_at)
+    if total <= 0.0:
+        total = 0.0
+        util = 0.0
+    else:
+        util = bus_busy / total
+    return SimResult(time=total, rc_done=rc_done, reads_done=reads_done_at,
+                     bus_busy=bus_busy, util=util, segments=segments)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model stream simulation
+# ---------------------------------------------------------------------------
+#
+# A decode step is a *sequence* of GeMV matrices (layer order) interleaved
+# with NPU-only phases (attention + KV-cache traffic).  Read-compute requests
+# are activation-dependent (matrix k+1's input is matrix k's output) and so
+# serialize at matrix barriers; plain weight READS are activation-independent
+# and may prefetch ahead into any channel bubble, bounded by the NPU's weight
+# buffer (``prefetch_bytes``).  This is the paper's Slice Control applied to
+# the full request stream.
+
+
+@dataclasses.dataclass(frozen=True)
+class RCBlock:
+    """One matrix's per-channel workload inside the stream."""
+
+    n_tiles: int
+    rc_input_bytes: float
+    rc_result_bytes: float
+    read_bytes: float  # NPU-bound weight bytes on this channel, this matrix
+    t_r: float
+    bw: float
+    page_bytes: float = 16384.0
+
+
+@dataclasses.dataclass(frozen=True)
+class NpuPhase:
+    """Channel-idle phase (attention / KV traffic); reads may still flow."""
+
+    duration: float
+
+
+@dataclasses.dataclass
+class StreamResult:
+    time: float
+    bus_busy: float
+    util: float
+    stalled_on_reads: float  # time the barrier waited on undelivered reads
+
+
+def simulate_stream(items: list, policy: Policy = Policy.RC_SLICED,
+                    slice_bytes: int = DEFAULT_SLICE_BYTES,
+                    prefetch_bytes: float = 32e6) -> StreamResult:
+    """Simulate one channel executing the full decode stream.
+
+    Matrix barriers: RCBlock ``i+1`` cannot start until block ``i``'s rc tiles
+    are done AND its NPU-bound read bytes are delivered.  Reads are delivered
+    FIFO; reads belonging to blocks at-or-before the executing block are
+    always allowed, reads of future blocks prefetch into bubbles while the
+    NPU-side weight buffer (``prefetch_bytes``) has room.
+    """
+    n = len(items)
+    reads = [it.read_bytes if isinstance(it, RCBlock) else 0.0 for it in items]
+    left = list(reads)
+    finish = [0.0] * n  # when item i's reads were fully delivered
+
+    bus_free = 0.0
+    dies_free = 0.0
+    bus_busy = 0.0
+    stalled = 0.0
+    q_head = 0
+    while q_head < n and left[q_head] <= 0:
+        q_head += 1
+    delivered_total = 0.0
+    consumed_total = 0.0  # reads of all blocks at-or-before the current barrier
+    current = 0
+
+    def fill_reads(until: float) -> None:
+        """Deliver read data into the bus gap [bus_free, until]."""
+        nonlocal bus_free, bus_busy, q_head, delivered_total
+        if policy == Policy.RC_ONLY:
+            return
+        while q_head < n:
+            it = items[q_head]
+            if policy == Policy.RC_UNSLICED and q_head > current:
+                return  # unsliced reads can't opportunistically prefetch
+            step = slice_bytes if policy == Policy.RC_SLICED else it.page_bytes
+            t_unit = step / it.bw
+            gap = min(until, 1e30) - bus_free
+            if gap < t_unit - 1e-15:
+                return
+            # prefetch cap for future blocks' reads
+            if q_head > current:
+                room = prefetch_bytes - (delivered_total - consumed_total)
+                if room < step:
+                    return
+                budget_units = int(room / step)
+            else:
+                budget_units = 1 << 60
+            units_left = int(-(-left[q_head] // step))
+            k = min(int(gap / t_unit), units_left, budget_units)
+            if k <= 0:
+                return
+            amt = min(k * step, left[q_head])
+            bus_free += k * t_unit
+            bus_busy += k * t_unit
+            delivered_total += amt
+            left[q_head] -= amt
+            if left[q_head] <= 1e-9:
+                finish[q_head] = bus_free
+                q_head += 1
+                while q_head < n and left[q_head] <= 0:
+                    q_head += 1
+
+    barrier = 0.0
+    for i, it in enumerate(items):
+        current = i
+        if isinstance(it, NpuPhase):
+            end = barrier + it.duration
+            fill_reads(end)
+            barrier = end
+            consumed_total += 0.0
+            continue
+        t_in = it.rc_input_bytes / it.bw
+        t_out = it.rc_result_bytes / it.bw
+        rc_done = barrier
+        for _t in range(it.n_tiles):
+            earliest = max(barrier, dies_free - t_in)
+            # RC_UNSLICED head-of-line blocking: a pending whole-page read for
+            # the current (or earlier) block transmits before the rc input.
+            if (policy == Policy.RC_UNSLICED and q_head <= i and q_head < n
+                    and left[q_head] > 0):
+                fill_reads(max(bus_free, earliest) + it.page_bytes / it.bw)
+            else:
+                fill_reads(max(bus_free, earliest))
+            start_in = max(bus_free, earliest)
+            end_in = start_in + t_in
+            bus_busy += t_in
+            bus_free = end_in
+            die_end = max(end_in, dies_free) + it.t_r
+            dies_free = die_end
+            fill_reads(die_end)
+            start_out = max(bus_free, die_end)
+            bus_free = start_out + t_out
+            bus_busy += t_out
+            rc_done = bus_free
+        # Drain this block's own remaining reads (they gate the barrier).
+        if q_head <= i and q_head < n and left[i] > 0:
+            t0 = max(bus_free, rc_done)
+            fill_reads(float("inf"))
+            stalled += max(0.0, bus_free - t0)
+        my_reads = finish[i] if reads[i] > 0 else 0.0
+        barrier = max(rc_done, my_reads)
+        consumed_total += reads[i]
+
+    util = bus_busy / barrier if barrier > 0 else 0.0
+    return StreamResult(time=barrier, bus_busy=bus_busy, util=util,
+                        stalled_on_reads=stalled)

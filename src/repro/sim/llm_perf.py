@@ -1,0 +1,133 @@
+"""End-to-end decode performance of Cambricon-LLM (paper Figs 9/11/12/13/14/15).
+
+The decode step is simulated as a whole-channel request stream: read-compute
+requests serialize at matrix barriers (activation dependencies); NPU-bound
+weight reads are activation-independent and prefetch into channel bubbles
+(bounded by the NPU weight buffer).  NPU attention and KV-cache DRAM traffic
+appear as channel-idle phases that reads also fill.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.configs.base import ModelConfig
+from repro.core import planner, tiling
+from repro.core.hw import DEFAULT_NPU, FlashSpec, NPUSpec
+from repro.core.schedule import DEFAULT_SLICE_BYTES, Policy
+from repro.sim.engine import NpuPhase, RCBlock, simulate_stream
+
+
+@dataclasses.dataclass(frozen=True)
+class TokenTime:
+    total: float
+    npu_phase_time: float     # attention + KV/state DRAM traffic
+    channel_util: float       # bus-busy fraction over the token
+    channel_bytes: float      # bytes that crossed the flash channels (all ch.)
+    flash_array_bytes: float  # bytes read out of NAND arrays (energy model)
+    stalled_on_reads: float
+
+    @property
+    def tokens_per_s(self) -> float:
+        return 1.0 / self.total
+
+
+def _attn_phase_time(cfg: ModelConfig, seq_len: int, npu: NPUSpec,
+                     kv_bytes_per_elem: int, cross: bool = False) -> float:
+    """One attention instance on the NPU: QK^T + PV + softmax + KV traffic."""
+    n_heads, d_head = cfg.n_heads, cfg.d_head
+    kv_heads = cfg.n_kv_heads
+    kv_len = cfg.encoder_seq if cross else seq_len
+    if cfg.family == "mla_moe" and not cross:
+        # absorbed-MLA decode: per-head dot against the compressed cache
+        d_head = cfg.kv_lora_rank + cfg.qk_rope_dim
+        kv_heads = 1
+    macs = 2 * 2 * n_heads * d_head * kv_len
+    sfu = n_heads * kv_len
+    kv_bytes = 2 * kv_heads * d_head * kv_len * kv_bytes_per_elem
+    return macs / npu.ops_per_s + sfu / npu.sfu_ops_per_s + kv_bytes / npu.dram_bw
+
+
+def _ssm_phase_time(cfg: ModelConfig, npu: NPUSpec, kv_bytes_per_elem: int) -> float:
+    """One SSD state update: read+update+write the recurrent state."""
+    state_elems = cfg.ssm_nheads * cfg.ssm_headdim * cfg.ssm_state
+    conv_elems = cfg.ssm_conv * (cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state)
+    macs = 6 * state_elems
+    bytes_ = 2 * (state_elems + conv_elems) * kv_bytes_per_elem
+    return macs / npu.ops_per_s + bytes_ / npu.dram_bw
+
+
+def decode_token_time(cfg: ModelConfig, flash: FlashSpec,
+                      bytes_per_elem: float = 1.0,
+                      policy: Policy = Policy.RC_SLICED,
+                      slice_bytes: int = DEFAULT_SLICE_BYTES,
+                      seq_len: int = 1024,
+                      npu: NPUSpec | None = None,
+                      alpha_override: float | None = None,
+                      tile_override: tiling.TileShape | None = None,
+                      prefetch_bytes: float = 32e6) -> TokenTime:
+    npu = npu or DEFAULT_NPU
+    act_bytes = 1.0 if bytes_per_elem >= 1.0 else 2.0  # W4A16 -> 16-bit acts
+    kv_b = int(act_bytes)
+
+    plan_cache: dict[tuple[int, int], tiling.MatrixPlan] = {}
+
+    def get_plan(h: int, w: int) -> tiling.MatrixPlan:
+        key = (h, w)
+        if key not in plan_cache:
+            plan_cache[key] = tiling.plan_matrix(
+                h, w, flash, bytes_per_elem,
+                alpha_override=alpha_override, tile_override=tile_override)
+        return plan_cache[key]
+
+    items = []
+    npu_phase_time = 0.0
+    channel_bytes = 0.0
+    array_bytes = 0.0
+    stream = planner.decode_execution_stream(cfg)
+    n_attn_seen = 0
+    for it in stream:
+        if it[0] == "gemv":
+            _, h, w = it
+            plan = get_plan(h, w)
+            reads_per_ch = plan.npu_bytes / flash.channels
+            rc_in = (plan.tile.w / flash.channels * act_bytes
+                     + flash.t_cmd * flash.bw_channel)  # command overhead
+            rc_out = plan.tile.h * act_bytes
+            items.append(RCBlock(
+                n_tiles=plan.n_tiles, rc_input_bytes=rc_in,
+                rc_result_bytes=rc_out, read_bytes=reads_per_ch,
+                t_r=flash.t_r, bw=flash.bw_channel,
+                page_bytes=flash.page_bytes))
+            channel_bytes += (plan.n_tiles * (rc_in + rc_out) * flash.channels
+                              + plan.npu_bytes)
+            array_bytes += h * w * bytes_per_elem
+        elif it[0] == "attn":
+            cross = cfg.family == "audio" and n_attn_seen % 2 == 1
+            dur = _attn_phase_time(cfg, seq_len, npu, kv_b, cross)
+            n_attn_seen += 1
+            npu_phase_time += dur
+            items.append(NpuPhase(dur))
+        elif it[0] == "ssm":
+            dur = _ssm_phase_time(cfg, npu, kv_b)
+            npu_phase_time += dur
+            items.append(NpuPhase(dur))
+    res = simulate_stream(items, policy, slice_bytes, prefetch_bytes)
+    return TokenTime(
+        total=res.time,
+        npu_phase_time=npu_phase_time,
+        channel_util=res.util,
+        channel_bytes=channel_bytes,
+        flash_array_bytes=array_bytes,
+        stalled_on_reads=res.stalled_on_reads,
+    )
+
+
+def flash_only_token_time(cfg: ModelConfig, flash: FlashSpec,
+                          bytes_per_elem: float = 1.0,
+                          seq_len: int = 1024,
+                          npu: NPUSpec | None = None) -> TokenTime:
+    """Fig-14 ablation: no hardware-aware tiling, everything on flash (α=1)."""
+    return decode_token_time(cfg, flash, bytes_per_elem, Policy.RC_ONLY,
+                             seq_len=seq_len, npu=npu, alpha_override=1.0)

@@ -1,0 +1,50 @@
+"""AdamW in pure JAX (no optax dependency), with optional int8 gradient
+compression hooks (distributed/grad_compress.py) applied by the train loop."""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: dict
+    nu: dict
+
+
+def init_adamw(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params))
+
+
+def adamw_update(params, grads, state: AdamWState, lr: float = 3e-4,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, n):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        n = b2 * n + (1 - b2) * jnp.square(g)
+        mh = m / c1
+        nh = n / c2
+        step_val = mh / (jnp.sqrt(nh) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step_val).astype(p.dtype), m, n
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.mu)
+    flat_n = jax.tree.leaves(state.nu)
+    outs = [upd(p, g, m, n) for p, g, m, n in zip(flat_p, flat_g, flat_m, flat_n)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    new_n = jax.tree.unflatten(tdef, [o[2] for o in outs])
+    return new_p, AdamWState(step=step, mu=new_m, nu=new_n)

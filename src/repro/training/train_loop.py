@@ -1,0 +1,78 @@
+"""Training loop: loss, microbatched grad accumulation, remat, train_step."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as model_lib
+from repro.training.optimizer import AdamWState, adamw_update
+
+
+def loss_fn(params, cfg: ModelConfig, tokens: jax.Array,
+            extras: dict | None = None) -> jax.Array:
+    """Causal LM loss (teacher forcing, shift-by-one)."""
+    logits = model_lib.forward(params, cfg, tokens, extras)
+    # vlm: vision prefix positions produce no next-token loss
+    start = cfg.n_vision_tokens if cfg.family == "vlm" else 0
+    logits = logits[:, start:, :][:, :-1].astype(jnp.float32)
+    from repro.distributed import ctx
+    logits = ctx.constrain(logits, kind="logits")
+    tgt = tokens[:, 1:]
+    # Vocab-sharding-friendly NLL: contract the (sharded) vocab dim with a
+    # one-hot select instead of take_along_axis (which would gather the full
+    # logits when the LM head is vocab-parallel).
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    v = logits.shape[-1]
+    onehot = (tgt[..., None] == jnp.arange(v)[None, None, :])
+    picked = jnp.sum(logits * onehot, axis=-1)
+    return (lse - picked).mean()
+
+
+def make_train_step(cfg: ModelConfig, microbatches: int = 1, lr: float = 3e-4,
+                    remat: bool = True, grad_transform=None):
+    """Build a jit-able (params, opt_state, batch) -> (params, opt, loss).
+
+    ``microbatches`` splits the global batch for gradient accumulation via
+    lax.scan (bounds activation memory); ``grad_transform`` hooks gradient
+    compression (distributed/grad_compress.py).
+    """
+    lfn = loss_fn
+    if remat:
+        lfn = jax.checkpoint(loss_fn, static_argnums=(1,))
+
+    def train_step(params, opt_state: AdamWState, tokens, extras=None):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(lfn)(params, cfg, tokens, extras)
+        else:
+            mb = tokens.reshape(microbatches, -1, tokens.shape[-1])
+            mbx = None
+            if extras is not None:
+                mbx = jax.tree.map(
+                    lambda a: a.reshape((microbatches, -1) + a.shape[1:]),
+                    extras)
+
+            def acc_step(carry, xs):
+                g_acc, l_acc = carry
+                tok = xs[0]
+                ex = xs[1] if mbx is not None else None
+                loss, grads = jax.value_and_grad(lfn)(params, cfg, tok, ex)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, grads)
+                return (g_acc, l_acc + loss), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                acc_step, (g0, jnp.zeros((), jnp.float32)),
+                (mb, mbx) if mbx is not None else (mb,))
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss / microbatches
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        params, opt_state = adamw_update(params, grads, opt_state, lr=lr)
+        return params, opt_state, loss
+
+    return train_step

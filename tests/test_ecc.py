@@ -1,0 +1,117 @@
+"""§VI outlier-oriented ECC: round-trip, protection, f_prot, sizes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ecc
+
+
+def _weights_page(key, n_outliers=100, page=16384):
+    k0, k1, k2 = jax.random.split(key, 3)
+    bulk = (jax.random.normal(k0, (page,)) * 12).round().clip(-127, 127)
+    pos = jax.random.choice(k1, page, (n_outliers,), replace=False)
+    vals = jnp.where(jax.random.bernoulli(k2, 0.5, (n_outliers,)), 110., -115.)
+    w = bulk.at[pos].set(vals).astype(jnp.int8)
+    return jax.lax.bitcast_convert_type(w, jnp.uint8)
+
+
+def test_ecc_size_matches_paper():
+    # 8*9 + (14+5+16)*163 = 5777 bits ≈ 722 B < 1664 B spare area
+    assert ecc.ecc_size_bits() == 5777
+    assert ecc.ecc_size_bits() / 8 < 1664
+    assert ecc.n_outliers() == 163
+
+
+def test_clean_roundtrip_exact():
+    page = _weights_page(jax.random.PRNGKey(0))
+    e = ecc.encode_page(page)
+    assert bool((ecc.decode_page(page, e) == page).all())
+
+
+@pytest.mark.parametrize("ber", [1e-5, 1e-4, 2e-4])
+def test_correction_reduces_mse(ber):
+    page = _weights_page(jax.random.PRNGKey(1))
+    e = ecc.encode_page(page)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(int(ber * 1e7)))
+    noisy = ecc.inject_bitflips(page, ber, k1)
+    necc = ecc.inject_ecc_bitflips(e, ber, k2)
+    dec = ecc.decode_page(noisy, necc)
+    o = page.astype(jnp.int8).astype(jnp.float32)
+    raw = float(((noisy.astype(jnp.int8).astype(jnp.float32) - o) ** 2).mean())
+    cor = float(((dec.astype(jnp.int8).astype(jnp.float32) - o) ** 2).mean())
+    assert cor < raw * 0.5 or raw == 0.0
+
+
+def test_outliers_survive():
+    page = _weights_page(jax.random.PRNGKey(2))
+    e = ecc.encode_page(page)
+    vals = page.astype(jnp.int8).astype(jnp.int32)
+    top = jax.lax.top_k(jnp.abs(vals), 163)[1]
+    errs = 0
+    for t in range(8):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(100 + t))
+        noisy = ecc.inject_bitflips(page, 2e-4, k1)
+        dec = ecc.decode_page(noisy, ecc.inject_ecc_bitflips(e, 2e-4, k2))
+        errs += int((dec[top] != page[top]).sum())
+    assert errs == 0, f"{errs} protected outliers corrupted"
+
+
+def test_fake_outliers_clamped():
+    page = _weights_page(jax.random.PRNGKey(3))
+    e = ecc.encode_page(page)
+    thr = int(ecc._majority_bits(e.threshold, axis=-1))
+    # flip a mid-range value's sign bit to fake a huge outlier
+    vals = np.asarray(page.astype(jnp.int8)).copy()
+    victim = int(np.argmin(np.abs(vals.astype(np.int32))))  # smallest value
+    vals[victim] = 127  # way above threshold, not protected
+    noisy = jax.lax.bitcast_convert_type(jnp.asarray(vals), jnp.uint8)
+    dec = ecc.decode_page(noisy, e)
+    assert int(dec.astype(jnp.int8)[victim]) == 0  # clamped to zero
+
+
+def test_fprot_closed_form_n2():
+    # paper: N=2, x=1e-4 -> f_prot = 3x^2 = 3e-8
+    assert abs(ecc.protected_flip_rate(1e-4) - 3e-8) < 1e-9
+
+
+def test_fprot_monte_carlo():
+    """Empirical flip rate of majority-of-3 ≈ 3x^2 (within MC noise)."""
+    x = 0.02
+    key = jax.random.PRNGKey(7)
+    n = 200_000
+    vals = jnp.zeros((n,), jnp.uint8)
+    flips = jax.random.bernoulli(key, x, (3, n, 8))
+    weights = (1 << jnp.arange(8, dtype=jnp.uint32))
+    copies = [vals ^ (flips[i].astype(jnp.uint32) * weights).sum(-1
+                                                                 ).astype(jnp.uint8)
+              for i in range(3)]
+    voted = ecc._majority3_u8(*copies)
+    bit_flip_rate = float(
+        jnp.unpackbits(voted).astype(jnp.float32).mean())
+    expect = ecc.protected_flip_rate(x)
+    assert abs(bit_flip_rate - expect) < 0.3 * expect + 1e-5
+
+
+@given(st.integers(0, 2**14 - 1))
+@settings(max_examples=50, deadline=None)
+def test_hamming_single_error_correction(addr):
+    a = jnp.array([addr], jnp.uint16)
+    p = ecc.hamming_encode(a)
+    for bit in range(14):
+        corrupted = a ^ (1 << bit)
+        fixed, valid = ecc.hamming_correct(corrupted, p)
+        assert int(fixed[0]) == addr and bool(valid[0])
+    # parity-bit errors leave the address intact
+    for bit in range(5):
+        fixed, valid = ecc.hamming_correct(a, p ^ (1 << bit))
+        assert int(fixed[0]) == addr and bool(valid[0])
+
+
+def test_batched_pages():
+    pages = jnp.stack([_weights_page(jax.random.PRNGKey(i)) for i in range(4)])
+    e = ecc.encode_pages(pages)
+    dec = ecc.decode_pages(pages, e)
+    assert bool((dec == pages).all())

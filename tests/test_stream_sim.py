@@ -1,0 +1,96 @@
+"""Property tests for the whole-model stream simulator (hypothesis)."""
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.schedule import Policy
+from repro.sim.engine import NpuPhase, RCBlock, simulate_stream
+
+
+def _block(n_tiles, read_bytes, bw=1e9):
+    return RCBlock(n_tiles=n_tiles, rc_input_bytes=256.0,
+                   rc_result_bytes=256.0, read_bytes=float(read_bytes),
+                   t_r=30e-6, bw=bw, page_bytes=16384.0)
+
+
+streams = st.lists(
+    st.one_of(
+        st.builds(_block, st.integers(1, 12),
+                  st.sampled_from([0, 8192, 65536, 262144])),
+        st.builds(NpuPhase, st.floats(1e-6, 5e-4)),
+    ),
+    min_size=1, max_size=12)
+
+
+@given(streams)
+@settings(max_examples=60, deadline=None)
+def test_stream_time_covers_all_work(items):
+    """Completion time >= serial lower bounds; util in [0, 1]."""
+    res = simulate_stream(items, Policy.RC_SLICED)
+    rc_lb = sum(it.n_tiles * it.t_r for it in items
+                if isinstance(it, RCBlock))
+    npu_lb = sum(it.duration for it in items if isinstance(it, NpuPhase))
+    bus_lb = sum((it.n_tiles * (it.rc_input_bytes + it.rc_result_bytes)
+                  + it.read_bytes) / it.bw
+                 for it in items if isinstance(it, RCBlock))
+    assert res.time >= max(rc_lb, npu_lb, bus_lb) - 1e-12
+    assert 0.0 <= res.util <= 1.0 + 1e-9
+    assert res.bus_busy <= res.time + 1e-12
+
+
+@given(streams)
+@settings(max_examples=40, deadline=None)
+def test_sliced_vs_unsliced_bounded(items):
+    """Greedy bubble-filling is NOT universally better than head-of-line
+    paging (scheduling anomalies on adversarial streams reach ~1.29x when
+    reads vastly exceed bubble capacity); the invariant we hold is that the
+    sliced policy never loses badly, while on *model-shaped* streams it wins
+    1.38-1.42x (asserted against real configs in test_sim.py)."""
+    t_sliced = simulate_stream(items, Policy.RC_SLICED).time
+    t_unsliced = simulate_stream(items, Policy.RC_UNSLICED).time
+    assert t_sliced <= t_unsliced * 1.35
+
+
+@given(st.lists(st.integers(2, 12), min_size=1, max_size=8))
+@settings(max_examples=40, deadline=None)
+def test_sliced_wins_on_balanced_streams(tile_counts):
+    """When reads fit the bubble budget (the paper's α-balanced regime),
+    slicing is never slower."""
+    items = []
+    for n in tile_counts:
+        bubble_bytes = n * 30e-6 * 1e9 * 0.8
+        items.append(_block(n, int(bubble_bytes)))
+    t_sliced = simulate_stream(items, Policy.RC_SLICED).time
+    t_unsliced = simulate_stream(items, Policy.RC_UNSLICED).time
+    assert t_sliced <= t_unsliced * 1.0001
+
+
+@given(streams)
+@settings(max_examples=40, deadline=None)
+def test_bus_byte_conservation(items):
+    """Every byte scheduled crosses the bus exactly once."""
+    res = simulate_stream(items, Policy.RC_SLICED)
+    expected = sum((it.n_tiles * (it.rc_input_bytes + it.rc_result_bytes)
+                    + it.read_bytes) / it.bw
+                   for it in items if isinstance(it, RCBlock))
+    assert abs(res.bus_busy - expected) < 1e-9
+
+
+@given(st.integers(1, 30), st.integers(0, 20))
+@settings(max_examples=40, deadline=None)
+def test_prefetch_window_nearly_monotone(n_tiles, n_pages):
+    """A larger prefetch window never hurts much.
+
+    Strict monotonicity is FALSE for greedy bubble-filling schedulers
+    (Graham's anomalies: extra capacity reorders greedy choices and can
+    finish later despite identical bus-busy time) — observed up to ~1.57x
+    on adversarial streams. We assert the anomaly stays bounded."""
+    items = [
+        _block(n_tiles, n_pages * 16384),
+        NpuPhase(2e-4),
+        _block(n_tiles, n_pages * 16384),
+    ]
+    t_small = simulate_stream(items, Policy.RC_SLICED,
+                              prefetch_bytes=16384.0).time
+    t_big = simulate_stream(items, Policy.RC_SLICED,
+                            prefetch_bytes=1e9).time
+    assert t_big <= t_small * 1.7

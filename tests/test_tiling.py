@@ -1,0 +1,98 @@
+"""§V hardware-aware tiling: closed forms, AM-GM optimality, plan invariants."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import tiling
+from repro.core.hw import (CAMBRICON_LLM_L, CAMBRICON_LLM_M, CAMBRICON_LLM_S,
+                           FlashSpec)
+
+
+def test_paper_optimal_tile_s_config():
+    # Paper Fig. 13: optimal tile for Cambricon-LLM-S is 256 x 2048
+    t = tiling.optimal_tile(CAMBRICON_LLM_S)
+    assert (t.h, t.w) == (256, 2048)
+
+
+def test_tile_invariant_all_configs():
+    for f in (CAMBRICON_LLM_S, CAMBRICON_LLM_M, CAMBRICON_LLM_L):
+        t = tiling.optimal_tile(f)
+        assert t.h * t.w == f.channels * f.ccores_per_channel * f.page_bytes
+        assert t.w % f.channels == 0
+
+
+flash_strategy = st.builds(
+    FlashSpec,
+    channels=st.sampled_from([1, 2, 4, 8, 16, 32, 64]),
+    chips_per_channel=st.sampled_from([1, 2, 4, 8]),
+    dies_per_chip=st.sampled_from([1, 2]),
+    page_bytes=st.sampled_from([4096, 8192, 16384]),
+)
+
+
+@given(flash_strategy)
+@settings(max_examples=60, deadline=None)
+def test_optimal_tile_beats_bruteforce(flash):
+    """The closed-form tile minimizes Trans among power-of-two H choices."""
+    t = tiling.optimal_tile(flash)
+    total = flash.channels * flash.ccores_per_channel * flash.page_bytes
+    best = tiling.channel_traffic_broadcast(t.h, t.w, flash.channels)
+    h = 1
+    while h <= total:
+        w = total // h
+        if w >= flash.channels and w % flash.channels == 0:
+            tr = tiling.channel_traffic_broadcast(h, w, flash.channels)
+            assert best <= tr + 1e-9, (h, w, tr, best, t)
+        h *= 2
+
+
+@given(flash_strategy)
+@settings(max_examples=60, deadline=None)
+def test_broadcast_scheme_never_worse(flash):
+    """Paper §V-A: input-broadcast scheme (b) beats no-reuse scheme (c)."""
+    t = tiling.optimal_tile(flash)
+    tb = tiling.channel_traffic_broadcast(t.h, t.w, flash.channels)
+    tc = tiling.channel_traffic_no_reuse(t.h, t.w, flash.channels,
+                                         flash.ccores_per_channel)
+    assert tb <= tc
+
+
+@given(flash_strategy)
+@settings(max_examples=60, deadline=None)
+def test_alpha_in_unit_interval(flash):
+    a = tiling.alpha_split(flash)
+    ar = tiling.alpha_requests(flash)
+    assert 0.0 < a < 1.0
+    assert 0.0 < ar < 1.0
+
+
+@given(flash_strategy,
+       st.sampled_from([1024, 2048, 4096, 8192, 32000, 51865]),
+       st.sampled_from([768, 2048, 4096, 12288]))
+@settings(max_examples=60, deadline=None)
+def test_plan_partition_exact(flash, h, w):
+    """flash_rows + npu_rows == h; tiles cover the flash region."""
+    p = tiling.plan_matrix(h, w, flash)
+    assert p.flash_rows + p.npu_rows == h
+    assert 0 <= p.alpha <= 1
+    if p.flash_rows:
+        assert p.n_tiles * p.tile.h >= p.flash_rows
+
+
+def test_fitted_tile_never_exceeds_page():
+    for flash in (CAMBRICON_LLM_S, CAMBRICON_LLM_M, CAMBRICON_LLM_L):
+        for (h, w) in [(4096, 4096), (9216, 9216), (3352, 768), (1408, 2048)]:
+            t = tiling.fit_tile(tiling.optimal_tile(flash), h, w, flash)
+            atomic = (t.h / flash.ccores_per_channel) * (t.w / flash.channels)
+            if t.h >= flash.ccores_per_channel and t.w >= flash.channels:
+                assert atomic <= flash.page_bytes + 1e-9
+
+
+def test_min_traffic_formula():
+    for flash in (CAMBRICON_LLM_S, CAMBRICON_LLM_L):
+        t = tiling.optimal_tile(flash)
+        got = tiling.channel_traffic_broadcast(t.h, t.w, flash.channels)
+        want = tiling.min_channel_traffic(flash)
+        assert got <= want * 1.02  # integer rounding tolerance
