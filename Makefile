@@ -1,0 +1,14 @@
+# Convenience targets; CI runs the same commands (.github/workflows/ci.yml).
+
+.PHONY: test test-fast bench-serving
+
+# full tier-1 (ROADMAP verify command)
+test:
+	PYTHONPATH=src python -m pytest -x -q
+
+# fast tier: skips the interpret-mode Pallas kernel sweeps
+test-fast:
+	python -m pytest -q -m "not slow"
+
+bench-serving:
+	PYTHONPATH=src python benchmarks/bench_serving.py

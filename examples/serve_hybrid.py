@@ -1,5 +1,10 @@
 """End-to-end serving driver: batched requests, W8A8 weights, continuous
-batching, straggler watchdog — the paper's deployment scenario as a server.
+batching over the paged per-slot KV cache, straggler watchdog — the paper's
+deployment scenario as a server.
+
+With 6 requests and only 2 slots, the paged cache admits each queued request
+the moment a slot frees (single-slot prefill while the other slot keeps
+decoding) instead of waiting for the whole batch to drain.
 
 Run:  PYTHONPATH=src python examples/serve_hybrid.py
 """
@@ -20,10 +25,10 @@ params = quantize_params(params)  # the paper's W8A8 deployment mode
 slow_steps = {3}  # pretend decode step 3 straggles -> engine re-dispatches
 watchdog = lambda step, dt: step in slow_steps and not slow_steps.discard(step)
 
-eng = ServingEngine(cfg, params, max_batch=4, max_seq=128, eos_id=-1,
-                    watchdog=watchdog)
+eng = ServingEngine(cfg, params, max_batch=2, max_seq=128, eos_id=-1,
+                    watchdog=watchdog, mode="continuous", page_size=16)
 prompts = [[1, 2, 3], [7, 8], [11, 12, 13, 14], [21], [31, 32], [41, 42, 43]]
-reqs = [Request(rid=i, prompt=p, max_new_tokens=12)
+reqs = [Request(rid=i, prompt=p, max_new_tokens=12 - i)
         for i, p in enumerate(prompts)]
 for r in reqs:
     eng.submit(r)
@@ -34,5 +39,6 @@ dt = time.time() - t0
 for r in reqs:
     print(f"req {r.rid}: prompt={r.prompt} -> {r.out_tokens}")
 print(f"\n{stats.tokens_out} tokens in {dt:.1f}s "
-      f"({stats.tokens_out/dt:.1f} tok/s), prefill waves={stats.prefills}, "
-      f"straggler re-dispatches={stats.straggler_events}")
+      f"({stats.tokens_out/dt:.1f} tok/s), single-slot prefills="
+      f"{stats.prefills}, straggler re-dispatches={stats.straggler_events}")
+print(stats.summary())

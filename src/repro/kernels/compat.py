@@ -1,0 +1,13 @@
+"""Pallas-TPU API compatibility shims.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` across
+0.4.x -> 0.5.x; the kernels import the symbol from here so they run on either
+side of the rename.
+"""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")

@@ -2,8 +2,11 @@
 
 One query token per (batch, head) against a long KV cache: grid
 (B*H, kv_blocks), kv sequential with online-softmax scratch.  Positions at or
-beyond ``length`` are masked (the cache is pre-allocated to max_seq).
-K/V BlockSpecs fold grouped heads onto their kv head (no repeat).
+beyond the slot's valid length are masked (the cache is pre-allocated to
+max_seq).  ``length`` may be a scalar (shared cursor, the paper's single-batch
+decode) or a per-slot vector [B] (continuous batching: each slot is at a
+different position in its own sequence).  K/V BlockSpecs fold grouped heads
+onto their kv head (no repeat).
 """
 
 from __future__ import annotations
@@ -15,11 +18,13 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 NEG_INF = -1e30
 
 
 def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-            *, block_k):
+            *, block_k, n_heads):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -35,7 +40,8 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * (d ** -0.5)
     ki = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    s = jnp.where(ki < len_ref[0], s, NEG_INF)
+    my_len = len_ref[pl.program_id(0) // n_heads]  # this slot's valid prefix
+    s = jnp.where(ki < my_len, s, NEG_INF)
     m_prev = m_ref[...]
     m_new = jnp.maximum(m_prev, s.max(axis=1))
     p = jnp.exp(s - m_new[:, None])
@@ -56,7 +62,7 @@ def gqa_decode_attention(q: jax.Array, k_cache: jax.Array,
                          v_cache: jax.Array, length: jax.Array,
                          block_k: int = 512, interpret: bool = True
                          ) -> jax.Array:
-    """q: [B, H, D]; caches [B, Smax, Hkv, D]; length: scalar int32.
+    """q: [B, H, D]; caches [B, Smax, Hkv, D]; length: scalar or [B] int32.
 
     Returns [B, H, D].  Smax must divide block_k (ops.py pads)."""
     b, h, d = q.shape
@@ -71,9 +77,10 @@ def gqa_decode_attention(q: jax.Array, k_cache: jax.Array,
     def kv_map(bh, j):
         return ((bh // n_rep) % hkv + (bh // h) * hkv, j, 0)
 
-    lens = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (1,))
+    lens = jnp.broadcast_to(
+        jnp.asarray(length, jnp.int32).reshape(-1), (b,))
     return pl.pallas_call(
-        functools.partial(_kernel, block_k=block_k),
+        functools.partial(_kernel, block_k=block_k, n_heads=h),
         grid=grid,
         in_specs=[
             pl.BlockSpec(memory_space=pltpu.SMEM),
@@ -89,6 +96,6 @@ def gqa_decode_attention(q: jax.Array, k_cache: jax.Array,
             pltpu.VMEM((1, d), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
     )(lens, qr, kr, vr).reshape(b, h, d)

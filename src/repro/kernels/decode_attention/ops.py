@@ -1,4 +1,11 @@
-"""jit'd wrapper for the decode-attention kernel (pads Smax to block)."""
+"""jit'd wrappers for the decode-attention kernel.
+
+``decode_attention_op`` pads Smax to the kv block and accepts either a shared
+scalar cursor or a per-slot lengths vector [B] (continuous batching).
+``paged_decode_attention_op`` is the block-table front-end: it gathers each
+slot's pages from the shared page pool into the contiguous [B, Smax] layout
+the kernel streams over, then masks per-slot valid lengths.
+"""
 
 from __future__ import annotations
 
@@ -14,6 +21,7 @@ from repro.kernels.decode_attention.decode_attention import gqa_decode_attention
 def decode_attention_op(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                         length: jax.Array, block_k: int = 512,
                         interpret: bool = True) -> jax.Array:
+    """q: [B, H, D]; caches [B, Smax, Hkv, D]; length: scalar or [B]."""
     smax = k_cache.shape[1]
     bk = min(block_k, smax)
     pad = (-smax) % bk
@@ -22,3 +30,20 @@ def decode_attention_op(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
         v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
     return gqa_decode_attention(q, k_cache, v_cache, length, block_k=bk,
                                 interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def paged_decode_attention_op(q: jax.Array, k_pages: jax.Array,
+                              v_pages: jax.Array, block_table: jax.Array,
+                              lengths: jax.Array, block_k: int = 512,
+                              interpret: bool = True) -> jax.Array:
+    """Paged decode attention over a shared page pool.
+
+    q: [B, H, D]; k/v_pages: [P, page, Hkv, D]; block_table: [B, pages_per
+    slot] int32 page ids; lengths: [B] valid tokens per slot.
+    """
+    from repro.models.attention import gather_paged_kv
+
+    k, v = gather_paged_kv(k_pages, v_pages, block_table)
+    return decode_attention_op(q, k, v, lengths, block_k=block_k,
+                               interpret=interpret)

@@ -1,3 +1,10 @@
-"""Oracle: models/attention.decode_attention is the reference."""
+"""Oracles: models/attention holds the pure-jnp references.
 
-from repro.models.attention import decode_attention as decode_attention_ref  # noqa: F401
+``decode_attention_ref`` accepts scalar or per-slot [B] lengths;
+``paged_decode_attention_ref`` is the block-table variant.
+"""
+
+from repro.models.attention import (  # noqa: F401
+    decode_attention as decode_attention_ref,
+    paged_decode_attention as paged_decode_attention_ref,
+)

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 
 def _kernel(page_ref, thr_ref, addr_ref, voted_ref, valid_ref, out_ref):
     page = page_ref[0]                               # [P] uint8 bit patterns
@@ -70,6 +72,6 @@ def ecc_decode_pages(pages: jax.Array, thr: jax.Array, addr: jax.Array,
         out_specs=pl.BlockSpec((1, p), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((b, p), jnp.uint8),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel",)),
     )(pages, thr, addr, voted, valid)

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 
 def _kernel(w_ref, x_ref, out_ref):
     j = pl.program_id(1)
@@ -57,6 +59,6 @@ def paged_int8_gemm(w_q: jax.Array, x_q: jax.Array,
         out_specs=pl.BlockSpec((tile_h, b), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((h, b), jnp.int32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
     )(w_q, x_q)

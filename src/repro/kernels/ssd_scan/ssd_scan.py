@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 NEG_INF = -1e30
 
 
@@ -66,6 +68,6 @@ def ssd_intra_chunk(a: jax.Array, b_mat: jax.Array, c_mat: jax.Array,
         out_specs=pl.BlockSpec((1, 1, qq, p), lambda i, c: (i, c, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, nc, qq, p), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "parallel")),
     )(a, b_mat, c_mat, x)

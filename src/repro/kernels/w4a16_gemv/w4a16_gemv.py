@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import compat
+
 
 def _kernel(wp_ref, scale_ref, x_ref, out_ref, *, group):
     j = pl.program_id(1)
@@ -62,6 +64,6 @@ def w4a16_gemm(w_packed: jax.Array, scales: jax.Array, x: jax.Array,
         out_specs=pl.BlockSpec((tile_h, b), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((h, b), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
     )(w_packed, scales, x)

@@ -1,7 +1,7 @@
 """Serving driver: batched requests through the continuous-batching engine.
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
-      --requests 8 --max-new 16
+      --requests 8 --max-new 16 --mode continuous
 """
 
 from __future__ import annotations
@@ -25,6 +25,12 @@ def main():
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--mode", default="auto",
+                    choices=["auto", "wave", "continuous"],
+                    help="auto = continuous where the family supports a "
+                         "paged KV cache, else wave")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (continuous mode)")
     ap.add_argument("--quant", default="int8", choices=["none", "int8"])
     args = ap.parse_args()
 
@@ -36,7 +42,8 @@ def main():
     if args.quant == "int8":
         params = quantize_params(params)  # the paper's W8A8 deployment mode
     eng = ServingEngine(cfg, params, max_batch=args.max_batch,
-                        max_seq=args.max_seq, eos_id=-1)
+                        max_seq=args.max_seq, eos_id=-1, mode=args.mode,
+                        page_size=args.page_size)
     rng = jax.random.PRNGKey(42)
     for rid in range(args.requests):
         rng, k = jax.random.split(rng)
@@ -50,6 +57,7 @@ def main():
     print(f"requests={args.requests} tokens_out={stats.tokens_out} "
           f"decode_steps={stats.decode_steps} wall={dt:.1f}s "
           f"tok/s={stats.tokens_out/dt:.1f}")
+    print(stats.summary())
 
 
 if __name__ == "__main__":

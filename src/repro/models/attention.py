@@ -108,7 +108,9 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     """One-token attention against a cache.
 
     q: [B, H, D]; k_cache/v_cache: [B, Smax, Hkv, D]; length: [] or [B]
-    (valid prefix length, the new token's kv already written).
+    (valid prefix length per slot, the new token's kv already written).
+    A slot with length 0 produces a garbage-but-finite row (uniform softmax
+    over masked scores) — callers ignore inactive slots' outputs.
     """
     b, smax, hkv, d = k_cache.shape
     h = q.shape[1]
@@ -122,3 +124,55 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhs,bshd->bhd", p, v.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache (block-table indirection, per-slot lengths)
+# ---------------------------------------------------------------------------
+
+
+def gather_paged_kv(k_pages: jax.Array, v_pages: jax.Array,
+                    block_table: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Materialize each slot's contiguous KV view from the shared page pool.
+
+    k/v_pages: [P, page, Hkv, D]; block_table: [B, pages_per_slot] int32 page
+    ids (0 = the reserved null page).  Returns [B, Smax, Hkv, D] with
+    Smax = pages_per_slot * page.
+    """
+    b, pages_per_slot = block_table.shape
+    _, page, hkv, d = k_pages.shape
+    k = k_pages[block_table].reshape(b, pages_per_slot * page, hkv, d)
+    v = v_pages[block_table].reshape(b, pages_per_slot * page, hkv, d)
+    return k, v
+
+
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, block_table: jax.Array,
+                           lengths: jax.Array) -> jax.Array:
+    """One-token attention against a paged cache.
+
+    q: [B, H, D]; k/v_pages: [P, page, Hkv, D]; block_table: [B,
+    pages_per_slot]; lengths: [B] valid tokens per slot (new token included).
+    """
+    k, v = gather_paged_kv(k_pages, v_pages, block_table)
+    return decode_attention(q, k, v, lengths)
+
+
+def write_paged_kv(k_pages: jax.Array, v_pages: jax.Array, k: jax.Array,
+                   v: jax.Array, block_table: jax.Array, lengths: jax.Array,
+                   active: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Scatter one new token's K/V per slot into its current page.
+
+    k/v: [B, Hkv, D] (this step's projections); lengths: [B] write positions
+    (= valid length before this token); active: [B] bool.  Inactive slots are
+    redirected to the reserved null page 0 so their garbage never lands in a
+    page owned by a live request.
+    """
+    page = k_pages.shape[1]
+    b = k.shape[0]
+    page_idx = block_table[jnp.arange(b), lengths // page]
+    page_idx = jnp.where(active, page_idx, 0)
+    offset = lengths % page
+    k_pages = k_pages.at[page_idx, offset].set(k.astype(k_pages.dtype))
+    v_pages = v_pages.at[page_idx, offset].set(v.astype(v_pages.dtype))
+    return k_pages, v_pages

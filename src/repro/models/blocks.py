@@ -7,7 +7,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.attention import (_repeat_kv, chunked_attention,
-                                    decode_attention)
+                                    decode_attention, paged_decode_attention,
+                                    write_paged_kv)
 from repro.models.layers import (apply_mrope, apply_rope, init_linear,
                                  layer_norm, linear, rms_norm)
 
@@ -40,6 +41,15 @@ def init_attn(key: jax.Array, cfg: ModelConfig, dtype=jnp.bfloat16) -> dict:
         "v": init_linear(ks[2], cfg.d_model, kvd, cfg.use_bias, dtype),
         "o": init_linear(ks[3], qd, cfg.d_model, False, dtype),
     }
+
+
+def _mrope_decode_pos(cfg: ModelConfig, pos):
+    """M-RoPE position of the text token at cache index ``pos``: prefill
+    assigns text tokens ``idx - n_vision + side`` (layers.mrope_positions),
+    and decode must continue that stream, not the raw cache index."""
+    from repro.models.layers import mrope_grid_side
+
+    return pos - cfg.n_vision_tokens + mrope_grid_side(cfg.n_vision_tokens)
 
 
 def _rope_qk(cfg: ModelConfig, q, k, positions):
@@ -94,7 +104,8 @@ def attn_decode(params: dict, x: jax.Array, cfg: ModelConfig,
     v = linear(params["v"], x).reshape(b, 1, cfg.n_kv_heads, cfg.d_head)
     posb = jnp.broadcast_to(jnp.asarray(pos).reshape(1, 1), (b, 1))
     if cfg.rope_mode == "mrope":
-        pos3 = jnp.broadcast_to(jnp.asarray(pos).reshape(1, 1, 1), (3, b, 1))
+        mpos = _mrope_decode_pos(cfg, jnp.asarray(pos))
+        pos3 = jnp.broadcast_to(mpos.reshape(1, 1, 1), (3, b, 1))
         q, k = _rope_qk(cfg, q, k, pos3)
     else:
         q, k = _rope_qk(cfg, q, k, posb)
@@ -103,6 +114,37 @@ def attn_decode(params: dict, x: jax.Array, cfg: ModelConfig,
     out = decode_attention(q[:, 0], k_cache, v_cache, pos + 1)
     out = linear(params["o"], out.reshape(b, -1))
     return out, k_cache, v_cache
+
+
+def attn_decode_paged(params: dict, x: jax.Array, cfg: ModelConfig,
+                      k_pages: jax.Array, v_pages: jax.Array,
+                      block_table: jax.Array, lengths: jax.Array,
+                      active: jax.Array
+                      ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token attention against a paged per-slot cache.
+
+    x: [B, D]; k/v_pages: [P, page, Hkv, Dh]; block_table: [B,
+    pages_per_slot]; lengths: [B] per-slot valid lengths (the new token's
+    write position); active: [B] bool.  Unlike ``attn_decode`` every slot
+    carries its own position, so mixed-progress slots decode in one batch.
+
+    Returns (out [B, D], new k_pages, new v_pages)."""
+    b = x.shape[0]
+    q = linear(params["q"], x).reshape(b, 1, cfg.n_heads, cfg.d_head)
+    k = linear(params["k"], x).reshape(b, 1, cfg.n_kv_heads, cfg.d_head)
+    v = linear(params["v"], x).reshape(b, 1, cfg.n_kv_heads, cfg.d_head)
+    posb = lengths.reshape(b, 1)
+    if cfg.rope_mode == "mrope":
+        pos3 = jnp.broadcast_to(_mrope_decode_pos(cfg, posb)[None], (3, b, 1))
+        q, k = _rope_qk(cfg, q, k, pos3)
+    else:
+        q, k = _rope_qk(cfg, q, k, posb)
+    k_pages, v_pages = write_paged_kv(k_pages, v_pages, k[:, 0], v[:, 0],
+                                      block_table, lengths, active)
+    out = paged_decode_attention(q[:, 0], k_pages, v_pages, block_table,
+                                 lengths + active.astype(jnp.int32))
+    out = linear(params["o"], out.reshape(b, -1))
+    return out, k_pages, v_pages
 
 
 def cross_attn_decode(params: dict, x: jax.Array, cfg: ModelConfig,
@@ -238,7 +280,8 @@ def attn_decode_sharded(params: dict, x: jax.Array, cfg: ModelConfig,
     v = linear(params["v"], x).reshape(b, 1, cfg.n_kv_heads, cfg.d_head)
     posb = jnp.broadcast_to(jnp.asarray(pos).reshape(1, 1), (b, 1))
     if cfg.rope_mode == "mrope":
-        pos3 = jnp.broadcast_to(jnp.asarray(pos).reshape(1, 1, 1), (3, b, 1))
+        mpos = _mrope_decode_pos(cfg, jnp.asarray(pos))
+        pos3 = jnp.broadcast_to(mpos.reshape(1, 1, 1), (3, b, 1))
         q, k = _rope_qk(cfg, q, k, pos3)
     else:
         q, k = _rope_qk(cfg, q, k, posb)

@@ -116,12 +116,20 @@ def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float) -> jax.Array:
     return jnp.concatenate(outs, axis=-1)
 
 
+def mrope_grid_side(n_vision: int) -> int:
+    """Vision-grid side length; also the first text position's offset (text
+    token at cache index ``idx`` sits at ``idx - n_vision + side`` in every
+    stream).  Decode paths continue the stream through this helper so prefill
+    and decode can't drift."""
+    import math
+
+    return max(int(math.sqrt(max(n_vision, 1))), 1)
+
+
 def mrope_positions(batch: int, seq: int, n_vision: int) -> jax.Array:
     """Stub M-RoPE position streams: vision tokens on a sqrt grid (t=0),
     text tokens sequential in all three streams."""
-    import math
-
-    side = max(int(math.sqrt(max(n_vision, 1))), 1)
+    side = mrope_grid_side(n_vision)
     idx = jnp.arange(seq)
     is_vis = idx < n_vision
     t_pos = jnp.where(is_vis, 0, idx - n_vision + side)

@@ -10,6 +10,20 @@ Public API (all pure functions):
     init_cache(cfg, batch, max_seq, dtype)       -> cache
     prefill(params, cfg, tokens, cache, extras)  -> (last_logits, cache)
     decode_step(params, cfg, token, cache)       -> (logits, cache)
+
+Paged per-slot variants (continuous batching; attention-cache families):
+    init_paged_cache(cfg, slots, max_seq, dtype, page_size)   -> cache
+    prefill_into_slots(params, cfg, tokens, true_lens, cache, slot_ids,
+                       extras)                   -> (last_logits [M, V], cache)
+    prefill_into_slot(params, cfg, tokens, true_len, cache, slot, extras)
+                                                 -> (last_logits [V], cache)
+    decode_step_paged(params, cfg, token, cache, active)
+                                                 -> (logits [B, V], cache)
+
+The legacy cache keeps ONE shared length cursor (``cache["len"]``) — every
+slot advances in lockstep, which forces wave admission in the serving
+engine.  The paged cache keeps a per-slot length vector and a block table
+into a shared page pool, so any slot can prefill/decode/free independently.
 """
 
 from __future__ import annotations
@@ -380,6 +394,43 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
     raise ValueError(f)
 
 
+def supports_paged(cfg: ModelConfig) -> bool:
+    """Paged serving needs a plain attention KV cache (no recurrent state
+    entangled with the shared cursor)."""
+    return cfg.family in ("dense", "vlm", "moe")
+
+
+def init_paged_cache(cfg: ModelConfig, num_slots: int, max_seq: int,
+                     dtype=jnp.bfloat16, page_size: int = 16) -> dict:
+    """Block-table KV cache: a shared page pool + per-slot state.
+
+    Layout:
+      k/v    [L, P, page, Hkv, Dh]  — the page pool.  Page 0 is the reserved
+                                      *null page*: inactive slots park their
+                                      writes there so freed pages can be
+                                      handed to other requests immediately.
+      block  [slots, pages_per_slot] int32 page ids (0 where unallocated).
+      lens   [slots] int32 per-slot valid lengths.
+
+    P is sized so a full complement of max-length slots always fits; the
+    indirection is what lets the engine admit/free mid-stream (and is the
+    hook for flash-resident pages à la KVNAND later).
+    """
+    if not supports_paged(cfg):
+        raise ValueError(f"paged cache unsupported for family {cfg.family!r}")
+    pages_per_slot = -(-max_seq // page_size)
+    num_pages = num_slots * pages_per_slot + 1
+    shape = (cfg.n_layers, num_pages, page_size, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "block": jnp.zeros((num_slots, pages_per_slot), jnp.int32),
+            "lens": jnp.zeros((num_slots,), jnp.int32)}
+
+
+def paged_slot_capacity(cache: dict) -> int:
+    """Max tokens one slot can hold (pages_per_slot * page_size)."""
+    return cache["block"].shape[1] * cache["k"].shape[2]
+
+
 # ---------------------------------------------------------------------------
 # prefill: full-sequence pass that also fills the cache
 # ---------------------------------------------------------------------------
@@ -480,6 +531,120 @@ def prefill(params: dict, cfg: ModelConfig, tokens: jax.Array, cache: dict,
 
     x_last = blocks.norm(cfg, params["final_norm"], x[:, -1])
     return lm_head(params, cfg, x_last), cache
+
+
+def prefill_into_slots(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                       true_lens: jax.Array, cache: dict, slot_ids: jax.Array,
+                       extras: dict | None = None) -> tuple[jax.Array, dict]:
+    """Prefill M requests into M slots of a paged cache, in one pass.
+
+    tokens: [M, Sp] right-padded to a common bucket length; true_lens: [M]
+    int32 valid cache lengths (prompt + any prepended vision tokens);
+    slot_ids: [M] int32.  Other slots keep decoding against the same pool —
+    only the named slots' pages (already present in their block-table rows)
+    are written.  Returns (per-request last-valid-position logits [M, V],
+    cache).
+
+    Right-padding keeps every row's positions 0-based, so outputs are
+    identical to prefilling each request alone: causality keeps tail pads out
+    of every valid position's attention, pad K/V land in the row's own pages
+    (or the null page past its allocation) masked by ``lens`` and overwritten
+    as decode advances.
+    """
+    extras = extras or {}
+    x = _embed(params, cfg, tokens, extras)
+    m, s = x.shape[0], x.shape[1]
+    positions = _positions(cfg, m, s)
+    if not supports_paged(cfg):
+        raise ValueError(f"paged prefill unsupported for family {cfg.family!r}")
+    layer_full = _moe_layer_full if cfg.family == "moe" else _dense_layer_full
+
+    def step(h, xs):
+        lp, _ = xs
+        h, (k, v) = layer_full(lp, h, cfg, positions)
+        return h, (k, v)
+
+    x, (ks, vs) = ctx.scan(step, x, (params["layers"], None))
+    # ks/vs: [L, M, S, Hkv, Dh] -> page-shaped [L, M, n_pages, page, Hkv, Dh]
+    nl, _, _, hkv, dh = ks.shape
+    page = cache["k"].shape[2]
+    n_pages = -(-s // page)
+    pad = n_pages * page - s
+    if pad:
+        widths = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+        ks, vs = jnp.pad(ks, widths), jnp.pad(vs, widths)
+    ks = ks.reshape(nl, m, n_pages, page, hkv, dh).astype(cache["k"].dtype)
+    vs = vs.reshape(nl, m, n_pages, page, hkv, dh).astype(cache["v"].dtype)
+    pids = cache["block"][slot_ids][:, :n_pages]                  # [M, n_pages]
+    true_lens = jnp.asarray(true_lens, jnp.int32)
+    cache = {**cache,
+             "k": cache["k"].at[:, pids].set(ks),
+             "v": cache["v"].at[:, pids].set(vs),
+             "lens": cache["lens"].at[slot_ids].set(true_lens)}
+    x_last = jnp.take_along_axis(
+        x, (true_lens - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+    x_last = blocks.norm(cfg, params["final_norm"], x_last)
+    return lm_head(params, cfg, x_last), cache
+
+
+def prefill_into_slot(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                      true_len: jax.Array, cache: dict, slot: jax.Array,
+                      extras: dict | None = None) -> tuple[jax.Array, dict]:
+    """Single-request convenience wrapper over ``prefill_into_slots``.
+
+    tokens: [1, Sp]; returns (logits [V], cache)."""
+    logits, cache = prefill_into_slots(
+        params, cfg, tokens, jnp.asarray(true_len, jnp.int32).reshape(1),
+        cache, jnp.asarray(slot, jnp.int32).reshape(1), extras)
+    return logits[0], cache
+
+
+def decode_step_paged(params: dict, cfg: ModelConfig, token: jax.Array,
+                      cache: dict, active: jax.Array
+                      ) -> tuple[jax.Array, dict]:
+    """One decode step over mixed-progress slots of a paged cache.
+
+    token: int32 [B]; active: bool [B].  Each slot attends its own valid
+    prefix (``cache["lens"]``) through its block-table row; inactive slots
+    write to the null page and keep length 0, so their lanes are pure
+    padding.  Returns (logits [B, V], cache) — logits of inactive slots are
+    garbage and must be ignored by the caller.
+    """
+    if not supports_paged(cfg):
+        raise ValueError(f"paged decode unsupported for family {cfg.family!r}")
+    x = params["embed"][token]
+    lens = cache["lens"]
+    # a slot at capacity must not decode: its block-table gather would clamp
+    # and silently overwrite its own last page — deactivate the lane instead
+    # (lens freezes, logits are garbage like any inactive lane's)
+    active = jnp.asarray(active, bool) & (lens < paged_slot_capacity(cache))
+    if cfg.rope_mode == "learned":
+        x = x + params["pos_embed"][lens]
+    f = cfg.family
+
+    def step(h, xs):
+        lp, kp, vp = xs
+        hn = blocks.norm(cfg, lp["attn_norm"], h)
+        attn_out, kp, vp = blocks.attn_decode_paged(
+            lp["attn"], hn, cfg, kp, vp, cache["block"], lens, active)
+        if cfg.parallel_block:
+            fo = ffn(lp["ffn"], hn, cfg.gated_ffn)
+            h = h + attn_out + fo
+        else:
+            h = h + attn_out
+            hn2 = blocks.norm(cfg, lp["ffn_norm"], h)
+            if f == "moe":
+                h = h + moe_mod.moe_ffn(lp["moe"], hn2[:, None], cfg)[:, 0]
+            else:
+                h = h + ffn(lp["ffn"], hn2, cfg.gated_ffn)
+        return h, (kp, vp)
+
+    x, (ks, vs) = ctx.scan(step, x,
+                           (params["layers"], cache["k"], cache["v"]))
+    cache = {**cache, "k": ks, "v": vs,
+             "lens": lens + active.astype(jnp.int32)}
+    x = blocks.norm(cfg, params["final_norm"], x)
+    return lm_head(params, cfg, x), cache
 
 
 def _conv_tail(h, lp, cfg: ModelConfig):

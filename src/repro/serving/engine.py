@@ -1,27 +1,43 @@
 """Serving engine: continuous-batched decode with straggler mitigation hooks.
 
-The engine owns a fixed-size slot table (the batch). Requests enter a queue,
-claim free slots, prefill once, and decode step-by-step; finished slots free
-immediately (continuous batching — the single-batch edge scenario of the
-paper is batch=1, the server scenario batches up to ``max_batch``).
+The engine owns a fixed-size slot table (the batch).  Requests enter a
+queue, claim free slots, prefill once, and decode step-by-step; finished
+slots free immediately.
+
+Two admission modes:
+
+* ``continuous`` (default where the family supports it) — the paged per-slot
+  KV cache (block table into a shared page pool + per-slot length vector)
+  lets a new request prefill into ANY free slot while the other slots keep
+  decoding: single-slot prefill-into-cache, per-slot masked decode
+  attention, page free on completion.  This is the serving lever the
+  on-device LLM literature (continuous batching / paged KV à la KVNAND)
+  identifies on top of the paper's single-batch NPU+flash scenario.
+* ``wave`` — the legacy shared-cursor cache: one length cursor for the whole
+  batch, so new requests only start when the batch drains.  Kept for
+  recurrent-state families and as the benchmark baseline.
 
 Fault hooks: per-step heartbeat timestamps; a pluggable ``watchdog`` sees
 (step, wall_time) and may trigger re-dispatch — tests inject artificial
-stragglers through it.
+stragglers through it.  Re-dispatch replays the step from the retained
+pre-step cache, so it is idempotent.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as model_lib
 from repro.serving import sampler
+from repro.serving.kv_cache import PageAllocator, pages_needed, prefill_bucket
 
 
 @dataclasses.dataclass
@@ -32,6 +48,60 @@ class Request:
     temperature: float = 0.0
     out_tokens: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    # lifecycle timestamps (time.monotonic), filled by the engine
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    t_first_token: float = 0.0
+    t_done: float = 0.0
+
+    @property
+    def admission_wait_s(self) -> float:
+        return self.t_admit - self.t_submit
+
+    @property
+    def ttft_s(self) -> float:
+        return self.t_first_token - self.t_submit
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_submit
+
+
+def _batch_extras(cfg: ModelConfig, batch: int) -> dict:
+    if cfg.family == "vlm":
+        return {"vision_embeds": jnp.zeros(
+            (batch, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16)}
+    if cfg.family == "audio":
+        return {"frames": jnp.zeros(
+            (batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)}
+    return {}
+
+
+# jitted step functions are shared per-config (ModelConfig is frozen and
+# hashable) so rebuilding an engine — e.g. the wave-vs-continuous benchmark —
+# reuses compile caches instead of retracing everything
+@functools.lru_cache(maxsize=None)
+def _jit_decode(cfg: ModelConfig):
+    return jax.jit(lambda p, t, c: model_lib.decode_step(p, cfg, t, c))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_decode_paged(cfg: ModelConfig):
+    return jax.jit(
+        lambda p, t, c, a: model_lib.decode_step_paged(p, cfg, t, c, a))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_prefill_slots(cfg: ModelConfig):
+    return jax.jit(lambda p, toks, tls, c, ss: model_lib.prefill_into_slots(
+        p, cfg, toks, tls, c, ss, _batch_extras(cfg, toks.shape[0])))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_prefill(cfg: ModelConfig):
+    return jax.jit(lambda p, toks, c, batch: model_lib.prefill(
+        p, cfg, toks, c, _batch_extras(cfg, batch)),
+        static_argnames=("batch",))
 
 
 @dataclasses.dataclass
@@ -41,6 +111,29 @@ class EngineStats:
     tokens_out: int = 0
     straggler_events: int = 0
     wall_decode_s: float = 0.0
+    admitted: int = 0
+    completed: int = 0
+    mode: str = ""
+    # per-request latency samples, appended at completion
+    admission_wait_s: list = dataclasses.field(default_factory=list)
+    ttft_s: list = dataclasses.field(default_factory=list)
+    latency_s: list = dataclasses.field(default_factory=list)
+
+    def percentiles(self, series: str = "latency_s",
+                    qs: tuple = (50, 90, 99)) -> dict:
+        """Per-request latency percentiles, e.g. ``percentiles("ttft_s")``."""
+        xs = getattr(self, series)
+        return {f"p{q}": float(np.percentile(xs, q)) if xs else 0.0
+                for q in qs}
+
+    def summary(self) -> str:
+        lat = self.percentiles("latency_s")
+        adm = self.percentiles("admission_wait_s")
+        return (f"[{self.mode}] requests={self.completed} "
+                f"tokens={self.tokens_out} steps={self.decode_steps} "
+                f"latency p50/p90/p99="
+                f"{lat['p50']:.3f}/{lat['p90']:.3f}/{lat['p99']:.3f}s "
+                f"admission p50/p99={adm['p50']:.3f}/{adm['p99']:.3f}s")
 
 
 class ServingEngine:
@@ -53,7 +146,15 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, max_batch: int = 4,
                  max_seq: int = 512, eos_id: int = 2,
                  watchdog: Optional[Callable[[int, float], bool]] = None,
-                 straggler_timeout_s: float = 5.0):
+                 straggler_timeout_s: float = 5.0, mode: str = "auto",
+                 page_size: int = 16):
+        if mode == "auto":
+            mode = ("continuous" if model_lib.supports_paged(cfg) else "wave")
+        if mode == "continuous" and not model_lib.supports_paged(cfg):
+            raise ValueError(
+                f"continuous mode needs a paged KV cache; family "
+                f"{cfg.family!r} has recurrent state tied to the shared "
+                f"cursor — use mode='wave'")
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -61,30 +162,179 @@ class ServingEngine:
         self.eos_id = eos_id
         self.watchdog = watchdog
         self.straggler_timeout_s = straggler_timeout_s
-        self.stats = EngineStats()
+        self.mode = mode
+        self.stats = EngineStats(mode=mode)
         self.queue: list[Request] = []
         self.slots: list[Optional[Request]] = [None] * max_batch
-        self.slot_pos = jnp.zeros((max_batch,), jnp.int32)
-        self.cache = model_lib.init_cache(cfg, max_batch, max_seq)
-        self.last_token = jnp.zeros((max_batch,), jnp.int32)
-        self._decode = jax.jit(
-            lambda p, t, c: model_lib.decode_step(p, cfg, t, c))
+        if mode == "continuous":
+            self.page_size = page_size
+            self.pages_per_slot = pages_needed(max_seq, page_size)
+            self.cache = model_lib.init_paged_cache(
+                cfg, max_batch, max_seq, page_size=page_size)
+            # hot-loop bookkeeping lives host-side in numpy (block table,
+            # last tokens, active mask): mutating them costs nothing and they
+            # ride into each jitted call as inputs, so the only per-step
+            # device work is the decode step itself
+            self.block = np.zeros((max_batch, self.pages_per_slot), np.int32)
+            del self.cache["block"]
+            self.last_np = np.zeros((max_batch,), np.int32)
+            self.allocator = PageAllocator(
+                max_batch * self.pages_per_slot + 1)
+            self.slot_pages: list[list[int]] = [[] for _ in range(max_batch)]
+            self.slot_len: list[int] = [0] * max_batch  # host mirror of lens
+            self._decode = _jit_decode_paged(cfg)
+            self._prefill_slots = _jit_prefill_slots(cfg)
+        else:
+            self.cache = model_lib.init_cache(cfg, max_batch, max_seq)
+            self.last_token = jnp.zeros((max_batch,), jnp.int32)
+            self._decode = _jit_decode(cfg)
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        if self._cache_len0(req) >= self.max_seq:
+            raise ValueError(f"prompt ({len(req.prompt)}) does not fit "
+                             f"max_seq ({self.max_seq})")
+        req.t_submit = time.monotonic()
         self.queue.append(req)
 
-    def _admit(self) -> None:
-        """Claim free slots.  NOTE: the per-slot cache model here decodes one
-        shared length cursor (cache["len"]); to keep admission simple the
-        engine admits waves — new requests only start when the batch drains.
-        A paged per-slot KV cache is the natural extension."""
+    def _cache_len0(self, req: Request) -> int:
+        """Valid cache length right after prefill (vision tokens included)."""
+        extra = (self.cfg.n_vision_tokens if self.cfg.family == "vlm" else 0)
+        return len(req.prompt) + extra
+
+    # ------------------------------------------------------------------
+    # continuous admission: prefill one request into one free slot while
+    # the rest of the batch keeps decoding
+    # ------------------------------------------------------------------
+    def _finish(self, i: int, req: Request) -> None:
+        now = time.monotonic()
+        req.done = True
+        req.t_done = now
+        self.stats.completed += 1
+        self.stats.admission_wait_s.append(req.admission_wait_s)
+        self.stats.ttft_s.append(req.ttft_s)
+        self.stats.latency_s.append(req.latency_s)
+        self.slots[i] = None
+        if self.mode == "continuous":
+            self.allocator.free(self.slot_pages[i])
+            self.slot_pages[i] = []
+            self.slot_len[i] = 0
+            self.block[i] = 0
+            self.cache["lens"] = self.cache["lens"].at[i].set(0)
+
+    def _admit_continuous(self) -> None:
+        """Prefill every queued request a free slot can take, in ONE batched
+        prefill-into-cache pass (right-padded, per-row 0-based positions),
+        while occupied slots keep their decode state untouched."""
+        free = [i for i in range(self.max_batch) if self.slots[i] is None]
+        group = []
+        now = time.monotonic()
+        while free and self.queue:
+            i = free.pop(0)
+            req = self.queue.pop(0)
+            len0 = self._cache_len0(req)
+            pids = self.allocator.alloc(pages_needed(len0, self.page_size))
+            self.slot_pages[i] = pids
+            self.block[i, :len(pids)] = pids
+            group.append((i, req, len0))
+        if not group:
+            return
+        # common bucket for the group, capped so bucket + vision tokens still
+        # fits a slot's block-table row (tail-pad pages beyond an allocation
+        # fall on the null page, but the row itself must not overflow)
+        extra = max(len0 - len(req.prompt) for i, req, len0 in group)
+        cap = self.pages_per_slot * self.page_size - extra
+        bucket = min(max(prefill_bucket(len(req.prompt))
+                         for i, req, len0 in group), cap)
+        # pad the group to max_batch rows by REPEATING row 0 (its duplicate
+        # scatters write identical values, so the result is deterministic):
+        # the jitted prefill then only ever sees (max_batch, bucket) shapes,
+        # one trace per bucket instead of one per group size
+        rows = group + [group[0]] * (self.max_batch - len(group))
+        toks = np.asarray(
+            [req.prompt + [0] * (bucket - len(req.prompt))
+             for i, req, len0 in rows], np.int32)
+        slot_ids = np.asarray([i for i, req, len0 in rows], np.int32)
+        true_lens = np.asarray([len0 for i, req, len0 in rows], np.int32)
+        logits, out_cache = self._prefill_slots(
+            self.params, toks, true_lens, {**self.cache, "block": self.block},
+            slot_ids)
+        out_cache.pop("block")  # authoritative copy stays host-side
+        self.cache = out_cache
+        self.stats.prefills += 1
+        self.stats.admitted += len(group)
+        toks_out = np.asarray(sampler.greedy(logits))
+        t1 = time.monotonic()
+        for (i, req, len0), tok in zip(group, toks_out):
+            tok = int(tok)
+            req.t_admit = now
+            req.t_first_token = t1
+            req.out_tokens.append(tok)
+            self.last_np[i] = tok
+            self.slot_len[i] = len0
+            self.slots[i] = req
+            if tok == self.eos_id or len(req.out_tokens) >= req.max_new_tokens:
+                self._finish(i, req)
+
+    def _ensure_pages(self) -> None:
+        """Allocate the page each active slot's next write lands in."""
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            pj = self.slot_len[i] // self.page_size
+            if pj >= len(self.slot_pages[i]):
+                pid = self.allocator.alloc(1)[0]
+                self.slot_pages[i].append(pid)
+                self.block[i, pj] = pid
+
+    def _step_continuous(self) -> bool:
+        self._admit_continuous()
+        if all(s is None for s in self.slots):
+            return bool(self.queue)
+        self._ensure_pages()
+        active = np.asarray([s is not None for s in self.slots])
+        pre_cache = {**self.cache, "block": self.block}  # for re-dispatch
+        t0 = time.monotonic()
+        logits, cache = self._decode(self.params, self.last_np, pre_cache,
+                                     active)
+        dt = time.monotonic() - t0
+        if self.watchdog is not None and self.watchdog(
+                self.stats.decode_steps, dt):
+            self.stats.straggler_events += 1
+            logits, cache = self._decode(self.params, self.last_np,
+                                         pre_cache, active)
+        cache.pop("block")  # authoritative copy stays host-side
+        self.cache = cache
+        self.stats.decode_steps += 1
+        self.stats.wall_decode_s += dt
+        tok_np = np.asarray(sampler.greedy(logits))  # one sync per step
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            t = int(tok_np[i])
+            self.last_np[i] = t
+            req.out_tokens.append(t)
+            self.stats.tokens_out += 1
+            self.slot_len[i] += 1
+            if (t == self.eos_id
+                    or len(req.out_tokens) >= req.max_new_tokens
+                    or self.slot_len[i] >= self.max_seq - 1):
+                self._finish(i, req)
+        return True
+
+    # ------------------------------------------------------------------
+    # legacy wave admission over the shared-cursor cache
+    # ------------------------------------------------------------------
+    def _admit_wave(self) -> None:
+        """The shared length cursor (cache["len"]) forces lockstep decode, so
+        new requests only start when the whole batch drains."""
         if any(s is not None for s in self.slots):
             return
         if not self.queue:
             return
         wave = self.queue[:self.max_batch]
         self.queue = self.queue[self.max_batch:]
+        now = time.monotonic()
         # right-align prompts to a common prefill length
         plen = max(len(r.prompt) for r in wave)
         toks = jnp.array(
@@ -92,63 +342,63 @@ class ServingEngine:
             + [[0] * plen] * (self.max_batch - len(wave)), jnp.int32)
         self.cache = model_lib.init_cache(self.cfg, self.max_batch,
                                           self.max_seq)
-        extras = self._extras(self.max_batch)
-        logits, self.cache = model_lib.prefill(self.params, self.cfg, toks,
-                                               self.cache, extras)
+        logits, self.cache = _jit_prefill(self.cfg)(
+            self.params, toks, self.cache, self.max_batch)
         self.stats.prefills += 1
+        self.stats.admitted += len(wave)
         tok = sampler.greedy(logits)
         self.last_token = tok
+        t1 = time.monotonic()
         for i, r in enumerate(wave):
             self.slots[i] = r
+            r.t_admit = now
+            r.t_first_token = t1
             r.out_tokens.append(int(tok[i]))
+            if int(tok[i]) == self.eos_id \
+                    or len(r.out_tokens) >= r.max_new_tokens:
+                self._finish(i, r)
 
-    def _extras(self, batch: int) -> dict:
-        cfg = self.cfg
-        if cfg.family == "vlm":
-            return {"vision_embeds": jnp.zeros(
-                (batch, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16)}
-        if cfg.family == "audio":
-            return {"frames": jnp.zeros(
-                (batch, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)}
-        return {}
-
-    # ------------------------------------------------------------------
-    def step(self) -> bool:
-        """One decode step over the active batch. Returns True if any work."""
-        self._admit()
+    def _step_wave(self) -> bool:
+        self._admit_wave()
         if all(s is None for s in self.slots):
-            return False
+            return bool(self.queue)
+        pre_cache = self.cache
         t0 = time.monotonic()
-        logits, self.cache = self._decode(self.params, self.last_token,
-                                          self.cache)
+        logits, cache = self._decode(self.params, self.last_token, pre_cache)
         dt = time.monotonic() - t0
         if self.watchdog is not None and self.watchdog(
                 self.stats.decode_steps, dt):
-            # straggler detected: re-issue the step (idempotent on donated
-            # caches because we retained the pre-step token; in multi-host
-            # deployments this re-dispatches to a hot-spare shard)
             self.stats.straggler_events += 1
-            logits, self.cache = self._decode(self.params, self.last_token,
-                                              self.cache)
+            logits, cache = self._decode(self.params, self.last_token,
+                                         pre_cache)
+        self.cache = cache
         self.stats.decode_steps += 1
         self.stats.wall_decode_s += dt
         tok = sampler.greedy(logits)
         self.last_token = tok
+        tok_np = np.asarray(tok)
         for i, r in enumerate(self.slots):
             if r is None:
                 continue
-            t = int(tok[i])
+            t = int(tok_np[i])
             r.out_tokens.append(t)
             self.stats.tokens_out += 1
             if t == self.eos_id or len(r.out_tokens) >= r.max_new_tokens \
                     or int(self.cache["len"]) >= self.max_seq - 1:
-                r.done = True
-                self.slots[i] = None
+                self._finish(i, r)
         return True
+
+    # ------------------------------------------------------------------
+    def step(self) -> bool:
+        """Admit + one decode step over the active batch; True if any work."""
+        if self.mode == "continuous":
+            return self._step_continuous()
+        return self._step_wave()
 
     def run(self, max_steps: int = 10_000) -> EngineStats:
         steps = 0
-        while (self.queue or any(self.slots)) and steps < max_steps:
+        while (self.queue or any(s is not None for s in self.slots)) \
+                and steps < max_steps:
             if not self.step():
                 break
             steps += 1

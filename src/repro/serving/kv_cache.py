@@ -1,0 +1,59 @@
+"""Host-side page management for the paged per-slot KV cache.
+
+The device arrays (page pool, block table, length vector) live in the cache
+dict built by ``models.model.init_paged_cache``; admission/free decisions are
+control flow, so the free list stays host-side in the engine.  Page 0 is the
+reserved null page (inactive slots park their writes there) and is never
+handed out.
+
+This split is deliberate: the allocator is the seam where flash-resident KV
+(KVNAND-style page spill to the NAND dies) plugs in later — the block table
+already gives every slot location-independence.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+class OutOfPages(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class PageAllocator:
+    """Free-list allocator over ``num_pages`` pages; page 0 is reserved."""
+
+    num_pages: int
+
+    def __post_init__(self):
+        self._free = list(range(self.num_pages - 1, 0, -1))
+
+    @property
+    def available(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int = 1) -> list[int]:
+        if n > len(self._free):
+            raise OutOfPages(f"need {n} pages, {len(self._free)} free")
+        out = [self._free.pop() for _ in range(n)]
+        return out
+
+    def free(self, pids: list[int]) -> None:
+        for p in pids:
+            if p == 0:
+                raise ValueError("page 0 is the reserved null page")
+            self._free.append(p)
+
+
+def pages_needed(n_tokens: int, page_size: int) -> int:
+    return -(-n_tokens // page_size)
+
+
+def prefill_bucket(n_tokens: int, floor: int = 8) -> int:
+    """Pad single-slot prefill lengths to power-of-two buckets so the jitted
+    prefill retraces O(log max_seq) times instead of once per prompt length."""
+    b = floor
+    while b < n_tokens:
+        b *= 2
+    return b

@@ -1,0 +1,101 @@
+"""Deterministic stand-in for ``hypothesis`` when it isn't installed.
+
+The property-test modules do::
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, strategies as st
+
+The fallback draws examples from a seeded ``random.Random`` keyed on the
+test name and example index, so runs are reproducible and failures can be
+replayed.  Only the strategy surface these tests use is implemented
+(integers, floats, sampled_from, lists, one_of, builds).  ``max_examples``
+is capped — the fallback is a smoke tier, the real fuzzing happens where
+hypothesis is available.
+"""
+
+from __future__ import annotations
+
+import random
+
+MAX_EXAMPLES_CAP = 25
+
+
+class Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> Strategy:
+        return Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float, **_kw) -> Strategy:
+        return Strategy(lambda r: r.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(seq) -> Strategy:
+        seq = list(seq)
+        return Strategy(lambda r: r.choice(seq))
+
+    @staticmethod
+    def one_of(*strategies) -> Strategy:
+        return Strategy(lambda r: r.choice(strategies).example(r))
+
+    @staticmethod
+    def lists(elements: Strategy, min_size: int = 0,
+              max_size: int = 10) -> Strategy:
+        def draw(r):
+            n = r.randint(min_size, max_size)
+            return [elements.example(r) for _ in range(n)]
+        return Strategy(draw)
+
+    @staticmethod
+    def builds(target, *arg_strategies, **kw_strategies) -> Strategy:
+        def draw(r):
+            args = [s.example(r) for s in arg_strategies]
+            kw = {k: s.example(r) for k, s in kw_strategies.items()}
+            return target(*args, **kw)
+        return Strategy(draw)
+
+
+strategies = _Strategies()
+st = strategies
+
+
+def settings(max_examples: int = 100, deadline=None, **_kw):
+    """Attach example-count settings; works above or below @given."""
+    def deco(fn):
+        fn._fallback_settings = {"max_examples": max_examples}
+        return fn
+    return deco
+
+
+def given(*arg_strategies):
+    def deco(fn):
+        # NOTE: no functools.wraps — copying the signature would make pytest
+        # treat the drawn parameters as fixtures; the wrapper must look
+        # zero-argument
+        def wrapper():
+            cfg = getattr(wrapper, "_fallback_settings",
+                          getattr(fn, "_fallback_settings", {}))
+            n = min(cfg.get("max_examples", 100), MAX_EXAMPLES_CAP)
+            for i in range(n):
+                rnd = random.Random(f"{fn.__module__}.{fn.__name__}#{i}")
+                drawn = [s.example(rnd) for s in arg_strategies]
+                try:
+                    fn(*drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example #{i}: {drawn!r}") from e
+        wrapper.__name__ = fn.__name__
+        wrapper.__module__ = fn.__module__
+        wrapper.__doc__ = fn.__doc__
+        return wrapper
+    return deco

@@ -8,6 +8,10 @@ import pytest
 from repro.quant.int8 import quantize_weight
 from repro.quant.int4 import quantize_weight4
 
+# the parametrized interpret-mode sweeps take minutes and carry the slow
+# marker (`pytest -m "not slow"` is the fast tier); the paged/lengths decode
+# attention checks added with the paged-KV PR stay in the fast tier
+slow = pytest.mark.slow
 
 KEY = jax.random.PRNGKey(0)
 
@@ -21,6 +25,7 @@ KEY = jax.random.PRNGKey(0)
     (1024, 512, 128),   # decode_32k batch
 ])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@slow
 def test_int8_pagegemv(h, w, b, dtype):
     from repro.kernels.int8_pagegemv.ops import paged_int8_gemv
     from repro.kernels.int8_pagegemv.ref import paged_int8_gemv_ref
@@ -42,6 +47,7 @@ def test_int8_pagegemv(h, w, b, dtype):
     (2, 4, 1, 384, 128),   # MQA, ragged seq -> pad
 ])
 @pytest.mark.parametrize("causal", [True, False])
+@slow
 def test_flash_attention(b, h, hkv, s, d, causal):
     from repro.kernels.flash_attention.ops import flash_attention_op
     from repro.kernels.flash_attention.ref import attention_ref
@@ -56,6 +62,7 @@ def test_flash_attention(b, h, hkv, s, d, causal):
                                rtol=2e-5, atol=2e-5)
 
 
+@slow
 def test_flash_attention_bf16():
     from repro.kernels.flash_attention.ops import flash_attention_op
     from repro.kernels.flash_attention.ref import attention_ref
@@ -78,6 +85,7 @@ def test_flash_attention_bf16():
     (4, 15, 5, 256, 64, 256),     # full cache
     (2, 8, 1, 300, 128, 77),      # MQA + ragged smax
 ])
+@slow
 def test_decode_attention(b, h, hkv, smax, d, length):
     from repro.kernels.decode_attention.ops import decode_attention_op
     from repro.models.attention import decode_attention as ref_fn
@@ -92,10 +100,60 @@ def test_decode_attention(b, h, hkv, smax, d, length):
                                rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.parametrize("b,h,hkv,smax,d", [
+    (3, 8, 8, 512, 64),
+    (2, 16, 2, 256, 64),    # GQA 8:1
+    (4, 15, 5, 300, 64),    # ragged smax
+])
+def test_decode_attention_lengths_vector(b, h, hkv, smax, d):
+    """Per-slot lengths [B] (continuous batching) vs the oracle, including a
+    zero-length (inactive) slot whose output is ignored."""
+    from repro.kernels.decode_attention.ops import decode_attention_op
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+
+    k1, k2, k3, k4 = jax.random.split(jax.random.fold_in(KEY, smax * h), 4)
+    q = jax.random.normal(k1, (b, h, d), jnp.float32)
+    kc = jax.random.normal(k2, (b, smax, hkv, d), jnp.float32)
+    vc = jax.random.normal(k3, (b, smax, hkv, d), jnp.float32)
+    lens = jax.random.randint(k4, (b,), 1, smax + 1).astype(jnp.int32)
+    lens = lens.at[0].set(0)  # inactive slot lane
+    out = decode_attention_op(q, kc, vc, lens, block_k=128)
+    ref = decode_attention_ref(q, kc, vc, lens)
+    np.testing.assert_allclose(np.asarray(out[1:]), np.asarray(ref[1:]),
+                               rtol=2e-5, atol=2e-5)
+    assert not bool(jnp.isnan(out).any())  # inactive lane finite, not equal
+
+
+def test_paged_decode_attention_matches_dense():
+    """Block-table gather + lengths masking == dense cache with the same
+    contents; slots point at scattered pages of a shared pool."""
+    from repro.kernels.decode_attention.ops import paged_decode_attention_op
+    from repro.kernels.decode_attention.ref import decode_attention_ref
+
+    b, h, hkv, d, page, pps = 3, 8, 2, 64, 16, 4
+    n_pages = b * pps + 1
+    k1, k2, k3 = jax.random.split(KEY, 3)
+    k_pages = jax.random.normal(k1, (n_pages, page, hkv, d), jnp.float32)
+    v_pages = jax.random.normal(k2, (n_pages, page, hkv, d), jnp.float32)
+    # interleaved page assignment exercises the indirection
+    block = jnp.arange(1, b * pps + 1, dtype=jnp.int32
+                       ).reshape(pps, b).T    # slot i -> pages i+1, i+1+b, ...
+    q = jax.random.normal(k3, (b, h, d), jnp.float32)
+    lens = jnp.asarray([page * pps, 7, 23], jnp.int32)
+    out = paged_decode_attention_op(q, k_pages, v_pages, block, lens,
+                                    block_k=32)
+    k_dense = k_pages[block].reshape(b, pps * page, hkv, d)
+    v_dense = v_pages[block].reshape(b, pps * page, hkv, d)
+    ref = decode_attention_ref(q, k_dense, v_dense, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
 # ----------------------------------------------------------------- W4A16
 @pytest.mark.parametrize("h,w,b", [
     (256, 2048, 1), (128, 512, 4), (300, 1024, 1), (64, 256, 2),
 ])
+@slow
 def test_w4a16_gemv(h, w, b):
     from repro.kernels.w4a16_gemv.ops import w4a16_gemv
     from repro.kernels.w4a16_gemv.ref import w4a16_gemv_ref
@@ -112,6 +170,7 @@ def test_w4a16_gemv(h, w, b):
 
 # -------------------------------------------------------------- ECC decode
 @pytest.mark.parametrize("ber", [0.0, 1e-4, 5e-4])
+@slow
 def test_ecc_decode_kernel(ber):
     from repro.core import ecc
     from repro.kernels.ecc_decode.ops import ecc_decode_op
@@ -152,6 +211,7 @@ def test_ecc_decode_kernel(ber):
     (2, 128, 8, 2, 16, 32, 32),
     (1, 64, 2, 1, 64, 128, 64),   # mamba2-130m-ish dims
 ])
+@slow
 def test_ssd_intra_chunk(b, s, h, g, p, n, chunk):
     from repro.kernels.ssd_scan.ops import ssd_intra_chunk_op
     from repro.kernels.ssd_scan.ref import ssd_intra_chunk_ref
@@ -173,6 +233,7 @@ def test_ssd_intra_chunk(b, s, h, g, p, n, chunk):
                                rtol=1e-4, atol=1e-4)
 
 
+@slow
 def test_ssd_kernel_matches_model_diag_plus_offdiag():
     """Kernel y_diag + jnp inter-chunk == models/ssm.ssd_chunked output."""
     from repro.kernels.ssd_scan.ops import ssd_intra_chunk_op

@@ -1,6 +1,9 @@
 """Property tests for the whole-model stream simulator (hypothesis)."""
 
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback, see _hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.schedule import Policy
 from repro.sim.engine import NpuPhase, RCBlock, simulate_stream
@@ -94,3 +97,68 @@ def test_prefetch_window_nearly_monotone(n_tiles, n_pages):
     t_big = simulate_stream(items, Policy.RC_SLICED,
                             prefetch_bytes=1e9).time
     assert t_big <= t_small * 1.7
+
+
+# ---------------------------------------------------------------------------
+# engine invariants (paged-serving PR): conservation + regime guarantees
+# ---------------------------------------------------------------------------
+
+def _balanced_block(n_tiles):
+    """Reads sized to ~80% of the block's own bubble budget (the paper's
+    alpha-balanced regime): every read fits the bubbles it rides in."""
+    return _block(n_tiles, int(n_tiles * 30e-6 * 1e9 * 0.8))
+
+
+# unlike test_sliced_wins_on_balanced_streams' RC-only streams, these mix in
+# NpuPhase gaps, so prefetch-ahead across barriers is exercised too
+balanced_streams = st.lists(
+    st.one_of(
+        st.builds(_balanced_block, st.integers(2, 12)),
+        st.builds(NpuPhase, st.floats(1e-6, 5e-4)),
+    ),
+    min_size=1, max_size=10)
+
+
+@given(streams)
+@settings(max_examples=40, deadline=None)
+def test_time_covers_bus_busy_unsliced(items):
+    """RC_UNSLICED conservation (test_stream_time_covers_all_work pins the
+    RC_SLICED policy): completion time covers every bus-occupied second."""
+    res = simulate_stream(items, Policy.RC_UNSLICED)
+    assert res.time >= res.bus_busy - 1e-12
+    assert 0.0 <= res.util <= 1.0 + 1e-9
+
+
+@given(balanced_streams)
+@settings(max_examples=40, deadline=None)
+def test_sliced_never_slower_when_reads_fit_bubbles(items):
+    """In the alpha-balanced regime slicing strictly dominates head-of-line
+    paging even across NpuPhase barriers (the adversarial counterexamples
+    need reads that overflow their block's bubble budget; see
+    test_sliced_vs_unsliced_bounded)."""
+    t_sliced = simulate_stream(items, Policy.RC_SLICED,
+                               prefetch_bytes=1e12).time
+    t_unsliced = simulate_stream(items, Policy.RC_UNSLICED,
+                                 prefetch_bytes=1e12).time
+    assert t_sliced <= t_unsliced * 1.0001
+
+
+@given(balanced_streams)
+@settings(max_examples=40, deadline=None)
+def test_no_read_stall_with_unbounded_prefetch(items):
+    """With an unbounded prefetch window and bubble-sized reads, every
+    block's reads are delivered before its barrier: stalled_on_reads == 0."""
+    res = simulate_stream(items, Policy.RC_SLICED, prefetch_bytes=1e12)
+    assert res.stalled_on_reads == 0.0
+
+
+@given(streams)
+@settings(max_examples=40, deadline=None)
+def test_stalls_absent_without_reads(items):
+    """A stream with no NPU-bound reads can never stall on them."""
+    import dataclasses as _dc
+    stripped = [_dc.replace(it, read_bytes=0.0)
+                if isinstance(it, RCBlock) else it for it in items]
+    res = simulate_stream(stripped, Policy.RC_SLICED)
+    assert res.stalled_on_reads == 0.0
+    assert res.time >= res.bus_busy - 1e-12

@@ -3,7 +3,11 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback, see _hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import tiling
 from repro.core.hw import (CAMBRICON_LLM_L, CAMBRICON_LLM_M, CAMBRICON_LLM_S,
