@@ -1,6 +1,6 @@
 # Convenience targets; CI runs the same commands (.github/workflows/ci.yml).
 
-.PHONY: test test-fast bench-serving
+.PHONY: test test-fast test-slow bench-serving bench-serving-smoke
 
 # full tier-1 (ROADMAP verify command)
 test:
@@ -10,5 +10,13 @@ test:
 test-fast:
 	python -m pytest -q -m "not slow"
 
+# nightly tier: only the slow interpret-mode kernel sweeps
+test-slow:
+	python -m pytest -q -m slow
+
 bench-serving:
 	PYTHONPATH=src python benchmarks/bench_serving.py
+
+# CI smoke: tiny admission + kvtier traces
+bench-serving-smoke:
+	PYTHONPATH=src python benchmarks/bench_serving.py --smoke

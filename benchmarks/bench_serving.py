@@ -1,13 +1,26 @@
-"""Serving benchmark: wave vs continuous admission under a Poisson trace.
+"""Serving benchmarks: admission policy and tiered-KV capacity traces.
 
-Wave admission (the legacy shared-cursor cache) only starts new requests when
-the whole batch drains; continuous admission (paged per-slot KV cache) refills
-any freed slot immediately.  At batch pressure > 1 (more requests than slots)
-the paged engine keeps slots busy and should be no slower end-to-end while
-cutting admission latency.
+Two traces, both Poisson arrivals:
+
+* ``admission`` — wave vs continuous admission.  Wave (the legacy
+  shared-cursor cache) only starts new requests when the whole batch drains;
+  continuous (paged per-slot KV cache) refills any freed slot immediately.
+  At batch pressure > 1 the paged engine keeps slots busy and should be no
+  slower end-to-end while cutting admission latency.
+* ``kvtier`` — the KV-capacity-constrained trace: the hot page pool is sized
+  BELOW total trace demand (``--pool-pages``), and three engines race it:
+  ``reject`` fails requests the pool can't take (the flash-less baseline),
+  ``requeue`` restarts starved requests later (graceful but stally), and
+  ``tiered`` spills cold pages to the simulated NAND flash tier and
+  prefetches them back through the Slice Control bubbles
+  (``kv_tier="flash"``).  Tiered must complete 100% of the trace; the report
+  prices its spill/prefetch traffic with the channel simulator
+  (``sim.llm_perf.kv_swap_overhead_s``) to show the bubble-bandwidth cost of
+  every evicted page.
 
 Run:  PYTHONPATH=src python benchmarks/bench_serving.py \
           --arch smollm-360m --requests 12 --rate 4 --max-batch 4
+      PYTHONPATH=src python benchmarks/bench_serving.py --smoke
 """
 
 from __future__ import annotations
@@ -20,8 +33,10 @@ import numpy as np
 import jax
 
 from repro.configs.registry import get_arch
+from repro.core.hw import CAMBRICON_LLM_S
 from repro.models import model as model_lib
 from repro.serving.engine import Request, ServingEngine
+from repro.sim.llm_perf import kv_swap_overhead_s
 
 # a small prompt-length menu keeps the per-shape jit retrace count bounded
 PROMPT_LENS = (4, 6, 8, 12)
@@ -65,18 +80,21 @@ def drive(eng: ServingEngine, reqs: list[Request],
     return time.monotonic() - t0
 
 
-def bench_mode(mode: str, cfg, params, args, timed_seed: int) -> dict:
+def _warm(cfg, params, args, **eng_kw):
     # warmup pass populates the shared jit caches (prefill shape buckets,
     # decode step) so the timed pass measures steady-state serving
     warm = ServingEngine(cfg, params, max_batch=args.max_batch,
-                         max_seq=args.max_seq, eos_id=-1, mode=mode,
-                         page_size=args.page_size)
+                         max_seq=args.max_seq, eos_id=-1,
+                         page_size=args.page_size, **eng_kw)
     # one warmup request per prompt length, each run to completion, so wave
     # mode compiles every [B, plen] prefill shape the trace can produce
     for i, plen in enumerate(PROMPT_LENS):
         warm.submit(Request(rid=-1 - i, prompt=[1] * plen, max_new_tokens=2))
         warm.run()
 
+
+def bench_mode(mode: str, cfg, params, args, timed_seed: int) -> dict:
+    _warm(cfg, params, args, mode=mode)
     eng = ServingEngine(cfg, params, max_batch=args.max_batch,
                         max_seq=args.max_seq, eos_id=-1, mode=mode,
                         page_size=args.page_size)
@@ -100,28 +118,11 @@ def bench_mode(mode: str, cfg, params, args, timed_seed: int) -> dict:
     }
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="smollm-360m")
-    ap.add_argument("--reduced", type=int, default=1)
-    ap.add_argument("--requests", type=int, default=16)
-    ap.add_argument("--rate", type=float, default=16.0,
-                    help="Poisson arrival rate, requests/s")
-    ap.add_argument("--max-new", type=int, default=24)
-    ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--max-seq", type=int, default=128)
-    ap.add_argument("--page-size", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
-    cfg = get_arch(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
-    params = model_lib.init_params(cfg, jax.random.PRNGKey(0),
-                                   max_seq=args.max_seq)
+def bench_admission(cfg, params, args) -> list[dict]:
     pressure = args.requests / args.max_batch
-    print(f"arch={cfg.name} requests={args.requests} rate={args.rate}/s "
-          f"max_batch={args.max_batch} batch_pressure={pressure:.1f}")
+    print(f"[admission] arch={cfg.name} requests={args.requests} "
+          f"rate={args.rate}/s max_batch={args.max_batch} "
+          f"batch_pressure={pressure:.1f}")
 
     rows = [bench_mode(m, cfg, params, args, timed_seed=args.seed)
             for m in ("wave", "continuous")]
@@ -144,6 +145,138 @@ def main():
         print("WARNING: continuous materially slower than wave "
               "at batch pressure > 1")
     return rows
+
+
+def make_kv_requests(n: int, cfg, max_new: int, seed: int) -> list[Request]:
+    """Uniform worst-case requests: every one carries the full prompt and
+    decode budget, so concurrent footprint reliably exceeds the pool."""
+    rng = np.random.RandomState(seed + 2)
+    plen = max(PROMPT_LENS)
+    return [Request(rid=rid,
+                    prompt=rng.randint(0, cfg.vocab_size, size=plen).tolist(),
+                    max_new_tokens=max_new)
+            for rid in range(n)]
+
+
+def bench_kvtier_variant(name: str, cfg, params, args, pool: int) -> dict:
+    kw = {"resident": dict(),  # unconstrained pool: the reference run
+          "reject": dict(num_pages=pool + 1, exhaust_policy="reject"),
+          "requeue": dict(num_pages=pool + 1, exhaust_policy="requeue"),
+          "tiered": dict(num_pages=pool + 1, kv_tier="flash")}[name]
+    _warm(cfg, params, args, mode="continuous")
+    eng = ServingEngine(cfg, params, max_batch=args.max_batch,
+                        max_seq=args.max_seq, eos_id=-1, mode="continuous",
+                        page_size=args.page_size, **kw)
+    reqs = make_kv_requests(args.requests, cfg, args.max_new, args.seed)
+    arrivals = poisson_arrivals(args.requests, args.rate, args.seed)
+    wall = drive(eng, reqs, arrivals)
+    s = eng.stats
+    assert all(r.done for r in reqs)
+    ok = sum(1 for r in reqs if not r.rejected)
+    return {
+        "variant": name, "wall_s": wall, "eng": eng,
+        "completed_pct": 100.0 * ok / len(reqs),
+        "tokens": s.tokens_out,
+        "pool_exhausted": s.pool_exhausted, "rejected": s.rejected,
+        "preemptions": s.preemptions,
+        "spill_pages": s.kv_spill_pages, "prefetch_pages": s.kv_prefetch_pages,
+        "spill_bytes": s.kv_spill_bytes, "prefetch_bytes": s.kv_prefetch_bytes,
+        "out_tokens": {r.rid: list(r.out_tokens) for r in reqs
+                       if not r.rejected},
+    }
+
+
+def bench_kvtier(cfg, params, args) -> list[dict]:
+    # demand: every request's whole-lifetime page footprint at once
+    from repro.serving.kv_cache import pages_needed
+    per_req = pages_needed(min(args.max_seq, max(PROMPT_LENS) + args.max_new),
+                           args.page_size)
+    demand = args.requests * per_req
+    pool = args.pool_pages
+    if pool <= 0:
+        # default: one request's lifetime footprint + 1 page — any two
+        # concurrent requests exceed the pool, so the tier must work
+        pool = per_req + 1
+    print(f"\n[kvtier] arch={cfg.name} requests={args.requests} "
+          f"hot_pool={pool} pages (trace demand ~{demand} pages)")
+
+    rows = [bench_kvtier_variant(v, cfg, params, args, pool)
+            for v in ("resident", "reject", "requeue", "tiered")]
+    hdr = ("variant", "wall_s", "done%", "tokens", "exhaust", "rejected",
+           "preempt", "spill_pg", "fetch_pg")
+    print(" ".join(f"{h:>9}" for h in hdr))
+    for r in rows:
+        print(f"{r['variant']:>9} {r['wall_s']:>9.2f} "
+              f"{r['completed_pct']:>9.1f} {r['tokens']:>9d} "
+              f"{r['pool_exhausted']:>9d} {r['rejected']:>9d} "
+              f"{r['preemptions']:>9d} {r['spill_pages']:>9d} "
+              f"{r['prefetch_pages']:>9d}")
+
+    resident, reject, requeue, tiered = rows
+    assert tiered["completed_pct"] == 100.0, "tiered must complete the trace"
+    # spill/prefetch roundtrips must not change a single output token: the
+    # tier relocates pages, it never approximates (unlike requeue's restart,
+    # where prefill-vs-decode numerics can flip a near-tie argmax)
+    assert tiered["out_tokens"] == resident["out_tokens"], \
+        "tiered outputs diverge from the all-resident run"
+
+    # price the tiered engine's page traffic on the paper's flash channels
+    s = tiered["eng"].stats
+    kv_pg = tiered["eng"].kv_page_bytes
+    per_tok_spill = s.kv_spill_bytes / max(s.tokens_out, 1)
+    per_tok_fetch = s.kv_prefetch_bytes / max(s.tokens_out, 1)
+    cost = kv_swap_overhead_s(cfg, CAMBRICON_LLM_S, per_tok_spill,
+                              per_tok_fetch, seq_len=args.max_seq)
+    print(f"\ntiered: 100% completed (reject baseline "
+          f"{reject['completed_pct']:.0f}%); "
+          f"{s.kv_spill_pages} pages spilled / {s.kv_prefetch_pages} "
+          f"prefetched ({(s.kv_spill_bytes + s.kv_prefetch_bytes) / 1e6:.2f} "
+          f"MB at {kv_pg / 1024:.0f} KiB/page)")
+    print(f"simulated bubble-bandwidth cost: {cost * 1e6:.2f} us/token "
+          f"({per_tok_spill + per_tok_fetch:.0f} B/token through the "
+          f"Slice Control bubbles)")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--reduced", type=int, default=1)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--rate", type=float, default=16.0,
+                    help="Poisson arrival rate, requests/s")
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--pool-pages", type=int, default=0,
+                    help="hot KV pool size for the kvtier trace "
+                         "(0 = auto, sized below trace demand)")
+    ap.add_argument("--trace", choices=("admission", "kvtier", "all"),
+                    default="all")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny fast preset for CI (overrides sizes)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.requests = min(args.requests, 8)
+        args.max_new = min(args.max_new, 10)
+        args.max_batch = min(args.max_batch, 3)
+        args.max_seq = min(args.max_seq, 64)
+        args.page_size = min(args.page_size, 8)
+        args.rate = 32.0
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(0),
+                                   max_seq=args.max_seq)
+    out = {}
+    if args.trace in ("admission", "all"):
+        out["admission"] = bench_admission(cfg, params, args)
+    if args.trace in ("kvtier", "all"):
+        out["kvtier"] = bench_kvtier(cfg, params, args)
+    return out
 
 
 if __name__ == "__main__":

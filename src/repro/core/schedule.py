@@ -6,12 +6,22 @@ A matrix plan expands into, per flash channel:
   ~tR of in-die work on every compute core, result partials back up;
 * ``reads_per_channel`` plain READ requests (pages bound for the NPU), each
   optionally segmented into ``slice_bytes`` slices that are interposed into
-  the channel-occupancy bubbles between read-compute transfers.
+  the channel-occupancy bubbles between read-compute transfers;
+* ``n_writes`` plain WRITE requests (pages bound for the flash dies) — the
+  Fig. 6 model extended for the tiered KV cache: when the serving engine
+  spills cold KV pages to the flash tier (``serving/kv_cache.py``,
+  ``TieredPageAllocator``), the spilled page rides the channel bus NPU→die
+  and the later prefetch rides it die→NPU.  Both directions are sliced and
+  interposed into the same bubbles as plain reads (writes program an idle
+  plane, so like NPU-bound reads they contend only for the bus in this
+  model).  See the "Flash-resident KV pages" design note in ROADMAP.md for
+  the tier diagram and eviction policy.
 
 Three policies reproduce paper Fig. 6:
   RC_ONLY      (a) only read-compute requests (channel mostly idle),
-  RC_UNSLICED  (b) whole-page reads block subsequent read-compute requests,
-  RC_SLICED    (c) sliced reads fill the bubbles (ours/paper's).
+  RC_UNSLICED  (b) whole-page reads/writes block subsequent read-compute
+                   requests,
+  RC_SLICED    (c) sliced reads/writes fill the bubbles (ours/paper's).
 """
 
 from __future__ import annotations
@@ -26,7 +36,7 @@ class Policy(enum.Enum):
     RC_SLICED = "rc_sliced"
 
 
-DEFAULT_SLICE_BYTES = 2048  # read-request slice granularity
+DEFAULT_SLICE_BYTES = 2048  # read/write-request slice granularity
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,6 +50,7 @@ class ChannelWorkload:
     page_bytes: int
     t_r: float                # NAND array read time
     bw: float                 # channel bus bandwidth, bytes/s
+    n_writes: int = 0         # plain page writes (KV spill), this channel
 
     @property
     def rc_bus_bytes(self) -> float:
@@ -49,9 +60,14 @@ class ChannelWorkload:
     def read_bus_bytes(self) -> float:
         return self.n_reads * self.page_bytes
 
+    @property
+    def write_bus_bytes(self) -> float:
+        return self.n_writes * self.page_bytes
+
 
 def channel_workload(plan, flash, act_bytes: float = 1.0,
-                     result_bytes: float = 1.0) -> ChannelWorkload:
+                     result_bytes: float = 1.0,
+                     kv_write_pages: int = 0) -> ChannelWorkload:
     """Build the per-channel workload from a core.tiling.MatrixPlan."""
     import math
 
@@ -64,4 +80,5 @@ def channel_workload(plan, flash, act_bytes: float = 1.0,
         page_bytes=flash.page_bytes,
         t_r=flash.t_r,
         bw=flash.bw_channel,
+        n_writes=kv_write_pages,
     )

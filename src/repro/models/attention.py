@@ -158,6 +158,33 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
     return decode_attention(q, k, v, lengths)
 
 
+def gather_kv_pages(k_pages: jax.Array, v_pages: jax.Array,
+                    page_ids: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Pull whole pages out of the pool (spill path of the flash KV tier).
+
+    k/v_pages: [L, P, page, Hkv, D] (the layer-stacked pool); page_ids: [n]
+    int32.  Returns ([L, n, page, Hkv, D], same for v).  Callers may pad
+    ``page_ids`` with the null page 0 to hit a shape bucket — the junk rows
+    are sliced off host-side.
+    """
+    return jnp.take(k_pages, page_ids, axis=1), \
+        jnp.take(v_pages, page_ids, axis=1)
+
+
+def scatter_kv_pages(k_pages: jax.Array, v_pages: jax.Array,
+                     page_ids: jax.Array, ks: jax.Array, vs: jax.Array
+                     ) -> tuple[jax.Array, jax.Array]:
+    """Write whole pages back into the pool (prefetch path of the KV tier).
+
+    k/v_pages: [L, P, page, Hkv, D]; page_ids: [n]; ks/vs: [L, n, page, Hkv,
+    D].  Bucket padding uses the null page 0 with zero payloads — duplicate
+    scatters to page 0 write identical values, so the result stays
+    deterministic, and null-page contents are never read unmasked.
+    """
+    return (k_pages.at[:, page_ids].set(ks.astype(k_pages.dtype)),
+            v_pages.at[:, page_ids].set(vs.astype(v_pages.dtype)))
+
+
 def write_paged_kv(k_pages: jax.Array, v_pages: jax.Array, k: jax.Array,
                    v: jax.Array, block_table: jax.Array, lengths: jax.Array,
                    active: jax.Array) -> tuple[jax.Array, jax.Array]:

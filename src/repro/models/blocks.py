@@ -7,7 +7,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models.attention import (_repeat_kv, chunked_attention,
-                                    decode_attention, paged_decode_attention,
+                                    decode_attention, gather_kv_pages,
+                                    paged_decode_attention, scatter_kv_pages,
                                     write_paged_kv)
 from repro.models.layers import (apply_mrope, apply_rope, init_linear,
                                  layer_norm, linear, rms_norm)
@@ -145,6 +146,31 @@ def attn_decode_paged(params: dict, x: jax.Array, cfg: ModelConfig,
                                  lengths + active.astype(jnp.int32))
     out = linear(params["o"], out.reshape(b, -1))
     return out, k_pages, v_pages
+
+
+def kv_swap_out(cache: dict, page_ids: jax.Array
+                ) -> tuple[jax.Array, jax.Array]:
+    """Spill path of the tiered KV cache: gather whole pages from the pool.
+
+    cache: the paged cache dict (layer-stacked k/v pools); page_ids: [n].
+    Returns page payloads ([L, n, page, Hkv, Dh] x2) bound for the flash
+    tier.  The pool itself is untouched — the freed pids are simply handed
+    back to the hot allocator.
+    """
+    return gather_kv_pages(cache["k"], cache["v"], page_ids)
+
+
+def kv_swap_in(cache: dict, page_ids: jax.Array, ks: jax.Array,
+               vs: jax.Array) -> dict:
+    """Prefetch path: scatter fetched page payloads into (new) hot pages.
+
+    The pages come back on *different* pids than they were spilled from; the
+    engine remaps the owning slot's block-table row, which is what keeps
+    decode math bit-identical to the all-resident run — attention only ever
+    sees the gathered values, not the pids.
+    """
+    k, v = scatter_kv_pages(cache["k"], cache["v"], page_ids, ks, vs)
+    return {**cache, "k": k, "v": v}
 
 
 def cross_attn_decode(params: dict, x: jax.Array, cfg: ModelConfig,

@@ -19,6 +19,8 @@ Paged per-slot variants (continuous batching; attention-cache families):
                                                  -> (last_logits [V], cache)
     decode_step_paged(params, cfg, token, cache, active)
                                                  -> (logits [B, V], cache)
+    swap_out_pages(cache, page_ids)              -> (k_pages, v_pages)
+    swap_in_pages(cache, page_ids, ks, vs)       -> cache
 
 The legacy cache keeps ONE shared length cursor (``cache["len"]``) — every
 slot advances in lockstep, which forces wave admission in the serving
@@ -401,7 +403,8 @@ def supports_paged(cfg: ModelConfig) -> bool:
 
 
 def init_paged_cache(cfg: ModelConfig, num_slots: int, max_seq: int,
-                     dtype=jnp.bfloat16, page_size: int = 16) -> dict:
+                     dtype=jnp.bfloat16, page_size: int = 16,
+                     num_pages: int | None = None) -> dict:
     """Block-table KV cache: a shared page pool + per-slot state.
 
     Layout:
@@ -412,14 +415,19 @@ def init_paged_cache(cfg: ModelConfig, num_slots: int, max_seq: int,
       block  [slots, pages_per_slot] int32 page ids (0 where unallocated).
       lens   [slots] int32 per-slot valid lengths.
 
-    P is sized so a full complement of max-length slots always fits; the
-    indirection is what lets the engine admit/free mid-stream (and is the
-    hook for flash-resident pages à la KVNAND later).
+    By default P is sized so a full complement of max-length slots always
+    fits; ``num_pages`` caps the *hot* pool below that (KV demand > NPU DRAM,
+    the paper's regime applied to the cache), in which case the engine's
+    tiered allocator spills cold pages to the flash tier and prefetches them
+    back through the Slice Control bubbles.  The block-table indirection is
+    what lets the engine admit/free mid-stream and relocate pages across
+    tiers without touching decode math.
     """
     if not supports_paged(cfg):
         raise ValueError(f"paged cache unsupported for family {cfg.family!r}")
     pages_per_slot = -(-max_seq // page_size)
-    num_pages = num_slots * pages_per_slot + 1
+    if num_pages is None:
+        num_pages = num_slots * pages_per_slot + 1
     shape = (cfg.n_layers, num_pages, page_size, cfg.n_kv_heads, cfg.d_head)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
             "block": jnp.zeros((num_slots, pages_per_slot), jnp.int32),
@@ -429,6 +437,29 @@ def init_paged_cache(cfg: ModelConfig, num_slots: int, max_seq: int,
 def paged_slot_capacity(cache: dict) -> int:
     """Max tokens one slot can hold (pages_per_slot * page_size)."""
     return cache["block"].shape[1] * cache["k"].shape[2]
+
+
+def swap_out_pages(cache: dict, page_ids: jax.Array
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Gather page payloads ([L, n, page, Hkv, Dh] x2) for spill to the
+    flash KV tier.  ``page_ids`` may be null-page padded to a shape bucket."""
+    return blocks.kv_swap_out(cache, page_ids)
+
+
+def swap_in_pages(cache: dict, page_ids: jax.Array, ks: jax.Array,
+                  vs: jax.Array) -> dict:
+    """Scatter prefetched page payloads back into the hot pool; the caller
+    remaps the owning slot's block-table row to the new pids."""
+    return blocks.kv_swap_in(cache, page_ids, ks, vs)
+
+
+def kv_page_bytes(cfg: ModelConfig, page_size: int,
+                  dtype=jnp.bfloat16) -> int:
+    """Bytes one KV page moves across the NAND channels when spilled or
+    prefetched: K and V, all layers, page_size tokens."""
+    itemsize = jnp.dtype(dtype).itemsize
+    return (2 * cfg.n_layers * page_size * cfg.n_kv_heads * cfg.d_head
+            * itemsize)
 
 
 # ---------------------------------------------------------------------------

@@ -17,6 +17,27 @@ Two admission modes:
   batch, so new requests only start when the batch drains.  Kept for
   recurrent-state families and as the benchmark baseline.
 
+Tiered KV (``kv_tier="flash"``): the hot page pool may be sized BELOW total
+demand (``num_pages``); when it runs out the engine preempts-by-eviction —
+it suspends a victim slot, spills its LRU pages to the simulated NAND flash
+tier (host blobs standing in for the dies), and prefetches them back through
+the Slice Control channel bubbles before the slot's next decode step.  Spill
+and prefetch ride ``models.model.swap_out_pages`` / ``swap_in_pages``; the
+block table is remapped to whatever hot pids the pages come back on, so
+decode math stays bit-identical to the all-resident run.  The simulated
+bubble-bandwidth cost of that traffic is priced by ``sim.llm_perf``
+(``kv_swap_overhead_s``) from the ``kv_spill_bytes`` / ``kv_prefetch_bytes``
+counters below.
+
+Pool-exhaustion policy without a flash tier (``exhaust_policy``):
+``"requeue"`` (default) puts the starved request back at the head of the
+queue (a mid-decode slot restarts later with its generated prefix folded
+into the prompt — greedy continuation, though near-tie argmaxes can flip
+where prefill and decode numerics differ; only the flash tier preserves
+exact logits); ``"reject"`` fails it, the capacity-constrained baseline the
+tiered benchmark compares against.  Both count
+``EngineStats.pool_exhausted`` instead of crashing the engine loop.
+
 Fault hooks: per-step heartbeat timestamps; a pluggable ``watchdog`` sees
 (step, wall_time) and may trigger re-dispatch — tests inject artificial
 stragglers through it.  Re-dispatch replays the step from the retained
@@ -37,7 +58,9 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import model as model_lib
 from repro.serving import sampler
-from repro.serving.kv_cache import PageAllocator, pages_needed, prefill_bucket
+from repro.serving.kv_cache import (OutOfPages, PageAllocator,
+                                    TieredPageAllocator, pages_needed,
+                                    prefill_bucket)
 
 
 @dataclasses.dataclass
@@ -48,6 +71,8 @@ class Request:
     temperature: float = 0.0
     out_tokens: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    rejected: bool = False  # failed admission under exhaust_policy="reject"
+    n_folded: int = 0  # out_tokens already folded into prompt by restarts
     # lifecycle timestamps (time.monotonic), filled by the engine
     t_submit: float = 0.0
     t_admit: float = 0.0
@@ -104,6 +129,12 @@ def _jit_prefill(cfg: ModelConfig):
         static_argnames=("batch",))
 
 
+# swap ops retrace per page-id bucket (power-of-two padded with the null
+# page), so the trace count stays O(log pool) like the prefill buckets
+_jit_swap_out = jax.jit(model_lib.swap_out_pages)
+_jit_swap_in = jax.jit(model_lib.swap_in_pages)
+
+
 @dataclasses.dataclass
 class EngineStats:
     prefills: int = 0
@@ -114,6 +145,15 @@ class EngineStats:
     admitted: int = 0
     completed: int = 0
     mode: str = ""
+    # pool pressure / tiered KV accounting
+    pool_exhausted: int = 0    # OutOfPages events absorbed (requeue/reject)
+    rejected: int = 0
+    preemptions: int = 0       # slots suspended (tiered) or restarted
+    resumes: int = 0           # suspended slots brought back hot
+    kv_spill_pages: int = 0
+    kv_prefetch_pages: int = 0
+    kv_spill_bytes: float = 0.0
+    kv_prefetch_bytes: float = 0.0
     # per-request latency samples, appended at completion
     admission_wait_s: list = dataclasses.field(default_factory=list)
     ttft_s: list = dataclasses.field(default_factory=list)
@@ -129,11 +169,17 @@ class EngineStats:
     def summary(self) -> str:
         lat = self.percentiles("latency_s")
         adm = self.percentiles("admission_wait_s")
-        return (f"[{self.mode}] requests={self.completed} "
-                f"tokens={self.tokens_out} steps={self.decode_steps} "
-                f"latency p50/p90/p99="
-                f"{lat['p50']:.3f}/{lat['p90']:.3f}/{lat['p99']:.3f}s "
-                f"admission p50/p99={adm['p50']:.3f}/{adm['p99']:.3f}s")
+        s = (f"[{self.mode}] requests={self.completed} "
+             f"tokens={self.tokens_out} steps={self.decode_steps} "
+             f"latency p50/p90/p99="
+             f"{lat['p50']:.3f}/{lat['p90']:.3f}/{lat['p99']:.3f}s "
+             f"admission p50/p99={adm['p50']:.3f}/{adm['p99']:.3f}s")
+        if self.kv_spill_pages or self.pool_exhausted or self.rejected:
+            s += (f" pool_exhausted={self.pool_exhausted} "
+                  f"rejected={self.rejected} preempt={self.preemptions} "
+                  f"spill/prefetch pages={self.kv_spill_pages}"
+                  f"/{self.kv_prefetch_pages}")
+        return s
 
 
 class ServingEngine:
@@ -147,7 +193,9 @@ class ServingEngine:
                  max_seq: int = 512, eos_id: int = 2,
                  watchdog: Optional[Callable[[int, float], bool]] = None,
                  straggler_timeout_s: float = 5.0, mode: str = "auto",
-                 page_size: int = 16):
+                 page_size: int = 16, num_pages: Optional[int] = None,
+                 kv_tier: str = "none", exhaust_policy: str = "requeue",
+                 flash_pages: Optional[int] = None):
         if mode == "auto":
             mode = ("continuous" if model_lib.supports_paged(cfg) else "wave")
         if mode == "continuous" and not model_lib.supports_paged(cfg):
@@ -155,6 +203,12 @@ class ServingEngine:
                 f"continuous mode needs a paged KV cache; family "
                 f"{cfg.family!r} has recurrent state tied to the shared "
                 f"cursor — use mode='wave'")
+        if kv_tier not in ("none", "flash"):
+            raise ValueError(f"kv_tier {kv_tier!r} not in ('none', 'flash')")
+        if exhaust_policy not in ("requeue", "reject"):
+            raise ValueError(f"exhaust_policy {exhaust_policy!r}")
+        if kv_tier == "flash" and mode != "continuous":
+            raise ValueError("kv_tier='flash' needs mode='continuous'")
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -163,14 +217,21 @@ class ServingEngine:
         self.watchdog = watchdog
         self.straggler_timeout_s = straggler_timeout_s
         self.mode = mode
+        self.kv_tier = kv_tier
+        self.exhaust_policy = exhaust_policy
         self.stats = EngineStats(mode=mode)
         self.queue: list[Request] = []
         self.slots: list[Optional[Request]] = [None] * max_batch
         if mode == "continuous":
             self.page_size = page_size
             self.pages_per_slot = pages_needed(max_seq, page_size)
+            full_pool = max_batch * self.pages_per_slot + 1
+            self.num_pages = full_pool if num_pages is None else num_pages
             self.cache = model_lib.init_paged_cache(
-                cfg, max_batch, max_seq, page_size=page_size)
+                cfg, max_batch, max_seq, page_size=page_size,
+                num_pages=self.num_pages)
+            self.kv_page_bytes = model_lib.kv_page_bytes(
+                cfg, page_size, self.cache["k"].dtype)
             # hot-loop bookkeeping lives host-side in numpy (block table,
             # last tokens, active mask): mutating them costs nothing and they
             # ride into each jitted call as inputs, so the only per-step
@@ -178,10 +239,19 @@ class ServingEngine:
             self.block = np.zeros((max_batch, self.pages_per_slot), np.int32)
             del self.cache["block"]
             self.last_np = np.zeros((max_batch,), np.int32)
-            self.allocator = PageAllocator(
-                max_batch * self.pages_per_slot + 1)
+            if kv_tier == "flash":
+                self.allocator = TieredPageAllocator(self.num_pages,
+                                                     flash_pages)
+            else:
+                self.allocator = PageAllocator(self.num_pages)
+            # per-slot page lists mirror the block table; a 0 entry marks a
+            # page currently cold (spilled to the flash tier)
             self.slot_pages: list[list[int]] = [[] for _ in range(max_batch)]
             self.slot_len: list[int] = [0] * max_batch  # host mirror of lens
+            self.suspended: list[bool] = [False] * max_batch
+            self.resume_order: list[int] = []  # FIFO of suspended slots
+            self._resumed_now: set[int] = set()
+            self._idle_steps = 0  # consecutive steps with nothing decodable
             self._decode = _jit_decode_paged(cfg)
             self._prefill_slots = _jit_prefill_slots(cfg)
         else:
@@ -194,6 +264,16 @@ class ServingEngine:
         if self._cache_len0(req) >= self.max_seq:
             raise ValueError(f"prompt ({len(req.prompt)}) does not fit "
                              f"max_seq ({self.max_seq})")
+        if self.mode == "continuous":
+            # the whole-lifetime page demand of ONE request must fit the hot
+            # pool, or pool-exhaustion recovery (requeue / suspend+resume)
+            # could never make progress on it
+            worst = min(self.max_seq,
+                        self._cache_len0(req) + req.max_new_tokens)
+            if pages_needed(worst, self.page_size) > self.num_pages - 1:
+                raise ValueError(
+                    f"request needs up to {pages_needed(worst, self.page_size)}"
+                    f" pages, hot pool has {self.num_pages - 1}")
         req.t_submit = time.monotonic()
         self.queue.append(req)
 
@@ -203,9 +283,138 @@ class ServingEngine:
         return len(req.prompt) + extra
 
     # ------------------------------------------------------------------
+    # tiered KV: spill / prefetch / suspend / resume
+    # ------------------------------------------------------------------
+    def _bucket_pids(self, pids: list[int]) -> np.ndarray:
+        """Pad a page-id list to a power-of-two bucket with the null page."""
+        n = prefill_bucket(len(pids), floor=1)
+        return np.asarray(pids + [0] * (n - len(pids)), np.int32)
+
+    def _spill(self, items: list[tuple[tuple[int, int], int]]) -> int:
+        """Swap ``(key=(slot, page_idx), pid)`` hot pages out to flash;
+        returns how many actually moved.  With a bounded flash tier, items
+        past its capacity go back on the eviction queue instead of
+        half-spilling (which would leak their hot pids)."""
+        room = self.allocator.flash_available
+        if room is not None and len(items) > room:
+            for key, pid in items[room:]:
+                self.allocator.mark_evictable(key, pid)
+            items = items[:room]
+        if not items:
+            return 0
+        pids = [pid for _, pid in items]
+        ks, vs = _jit_swap_out(self.cache, self._bucket_pids(pids))
+        ks = np.asarray(ks)
+        vs = np.asarray(vs)
+        for j, (key, _pid) in enumerate(items):
+            # copy the page out of the bucketed gather so the payload doesn't
+            # pin the whole bucket buffer until its siblings are fetched
+            self.allocator.store(key, (ks[:, j].copy(), vs[:, j].copy()))
+            slot, page_idx = key
+            self.block[slot, page_idx] = 0
+            self.slot_pages[slot][page_idx] = 0
+        self.allocator.free(pids)
+        self.stats.kv_spill_pages += len(pids)
+        self.stats.kv_spill_bytes += len(pids) * self.kv_page_bytes
+        return len(items)
+
+    def _prefetch_slot(self, i: int) -> bool:
+        """Bring all of slot ``i``'s cold pages back hot (before its next
+        decode step); returns False when the hot pool can't take them yet."""
+        keys = self.allocator.cold_keys(lambda k: k[0] == i)
+        if not keys:
+            return True
+        need = len(keys)
+        if self.allocator.available < need:
+            short = need - self.allocator.available
+            self._spill(self.allocator.pop_evictable(
+                short, exclude=lambda k: k[0] == i))
+        if self.allocator.available < need:
+            return False
+        keys.sort(key=lambda k: k[1])
+        pids = self.allocator.alloc(need)
+        payloads = [self.allocator.fetch(k) for k in keys]
+        ks = np.stack([p[0] for p in payloads], axis=1)  # [L,n,page,Hkv,Dh]
+        vs = np.stack([p[1] for p in payloads], axis=1)
+        bpids = self._bucket_pids(pids)
+        pad = len(bpids) - need
+        if pad:
+            widths = [(0, 0)] * ks.ndim
+            widths[1] = (0, pad)
+            ks, vs = np.pad(ks, widths), np.pad(vs, widths)
+        self.cache = _jit_swap_in(self.cache, bpids, ks, vs)
+        # residency-aware block-table remap: the pages came back on new pids
+        for key, pid in zip(keys, pids):
+            self.block[i, key[1]] = pid
+            self.slot_pages[i][key[1]] = pid
+        self.stats.kv_prefetch_pages += need
+        self.stats.kv_prefetch_bytes += need * self.kv_page_bytes
+        return True
+
+    def _suspend(self, i: int) -> None:
+        """Preempt slot ``i``: it stops decoding and its pages become LRU
+        eviction candidates, oldest (lowest page index) first, tail last."""
+        self.suspended[i] = True
+        self.resume_order.append(i)
+        self.stats.preemptions += 1
+        for page_idx, pid in enumerate(self.slot_pages[i]):
+            if pid != 0:
+                self.allocator.mark_evictable((i, page_idx), pid)
+
+    def _resume_suspended(self) -> None:
+        """Head-of-line resume: the oldest suspended slot gets first claim on
+        freed pages (with eviction assist against other suspended slots), so
+        every preempted request is guaranteed to come back."""
+        while self.resume_order:
+            i = self.resume_order[0]
+            if not self._prefetch_slot(i):
+                break
+            self.resume_order.pop(0)
+            self.suspended[i] = False
+            self.allocator.unmark_slot(lambda k, i=i: k[0] == i)
+            self._resumed_now.add(i)
+            self.stats.resumes += 1
+
+    def _make_room(self, n: int, avoid: frozenset = frozenset()) -> None:
+        """Free hot pages until ``n`` are available: spill LRU eviction
+        candidates first, then preempt the longest active slot and retry.
+        ``avoid`` shields slots (e.g. ones resumed this very step)."""
+        while self.allocator.available < n:
+            short = n - self.allocator.available
+            items = self.allocator.pop_evictable(short)
+            if items:
+                if self._spill(items) == 0:
+                    return  # flash tier full: eviction can't free anything
+                continue
+            victims = [i for i, r in enumerate(self.slots)
+                       if r is not None and not self.suspended[i]
+                       and i not in avoid]
+            if not victims:
+                return
+            self._suspend(max(victims, key=lambda i: self.slot_len[i]))
+
+    def _alloc_pages(self, n: int, avoid: frozenset = frozenset()) -> list[int]:
+        if self.kv_tier == "flash" and self.allocator.available < n:
+            self._make_room(n, avoid)
+        return self.allocator.alloc(n)
+
+    # ------------------------------------------------------------------
     # continuous admission: prefill one request into one free slot while
     # the rest of the batch keeps decoding
     # ------------------------------------------------------------------
+    def _release_slot(self, i: int) -> None:
+        self.slots[i] = None
+        self.allocator.free([p for p in self.slot_pages[i] if p != 0])
+        if self.kv_tier == "flash":
+            self.allocator.drop_slot(lambda k, i=i: k[0] == i)
+            if self.suspended[i]:
+                self.suspended[i] = False
+                self.resume_order.remove(i)
+        self.slot_pages[i] = []
+        self.slot_len[i] = 0
+        self.block[i] = 0
+        self.cache["lens"] = self.cache["lens"].at[i].set(0)
+
     def _finish(self, i: int, req: Request) -> None:
         now = time.monotonic()
         req.done = True
@@ -214,13 +423,26 @@ class ServingEngine:
         self.stats.admission_wait_s.append(req.admission_wait_s)
         self.stats.ttft_s.append(req.ttft_s)
         self.stats.latency_s.append(req.latency_s)
-        self.slots[i] = None
         if self.mode == "continuous":
-            self.allocator.free(self.slot_pages[i])
-            self.slot_pages[i] = []
-            self.slot_len[i] = 0
-            self.block[i] = 0
-            self.cache["lens"] = self.cache["lens"].at[i].set(0)
+            self._release_slot(i)
+        else:
+            self.slots[i] = None
+
+    def _reject(self, req: Request) -> None:
+        req.done = True
+        req.rejected = True
+        req.t_done = time.monotonic()
+        self.stats.rejected += 1
+
+    def _preempt_restart(self, i: int, req: Request) -> None:
+        """Pool exhausted mid-decode without a flash tier: fold the generated
+        prefix into the prompt and requeue — greedy decode is deterministic,
+        so the request's final ``out_tokens`` are unchanged."""
+        self.stats.preemptions += 1
+        req.prompt = req.prompt + req.out_tokens[req.n_folded:]
+        req.n_folded = len(req.out_tokens)
+        self._release_slot(i)
+        self.queue.insert(0, req)
 
     def _admit_continuous(self) -> None:
         """Prefill every queued request a free slot can take, in ONE batched
@@ -230,10 +452,21 @@ class ServingEngine:
         group = []
         now = time.monotonic()
         while free and self.queue:
-            i = free.pop(0)
+            i = free[0]
             req = self.queue.pop(0)
             len0 = self._cache_len0(req)
-            pids = self.allocator.alloc(pages_needed(len0, self.page_size))
+            try:
+                pids = self._alloc_pages(
+                    pages_needed(len0, self.page_size),
+                    avoid=frozenset(self._resumed_now))
+            except OutOfPages:
+                self.stats.pool_exhausted += 1
+                if self.exhaust_policy == "reject":
+                    self._reject(req)
+                    continue
+                self.queue.insert(0, req)  # head of queue keeps its turn
+                break
+            free.pop(0)
             self.slot_pages[i] = pids
             self.block[i, :len(pids)] = pids
             group.append((i, req, len0))
@@ -267,8 +500,9 @@ class ServingEngine:
         t1 = time.monotonic()
         for (i, req, len0), tok in zip(group, toks_out):
             tok = int(tok)
-            req.t_admit = now
-            req.t_first_token = t1
+            if req.t_admit == 0.0:  # restarts keep their first-admit times
+                req.t_admit = now
+                req.t_first_token = t1
             req.out_tokens.append(tok)
             self.last_np[i] = tok
             self.slot_len[i] = len0
@@ -277,22 +511,57 @@ class ServingEngine:
                 self._finish(i, req)
 
     def _ensure_pages(self) -> None:
-        """Allocate the page each active slot's next write lands in."""
-        for i, req in enumerate(self.slots):
-            if req is None:
+        """Allocate the page each active slot's next write lands in; on a dry
+        pool, preempt (tiered: suspend + spill; untiered: requeue/reject)."""
+        for i in range(self.max_batch):
+            req = self.slots[i]
+            if req is None or self.suspended[i]:
                 continue
             pj = self.slot_len[i] // self.page_size
-            if pj >= len(self.slot_pages[i]):
-                pid = self.allocator.alloc(1)[0]
-                self.slot_pages[i].append(pid)
-                self.block[i, pj] = pid
+            if pj < len(self.slot_pages[i]):
+                continue
+            try:
+                pid = self._alloc_pages(
+                    1, avoid=frozenset({i}) | self._resumed_now)[0]
+            except OutOfPages:
+                self.stats.pool_exhausted += 1
+                if self.kv_tier == "flash":
+                    self._suspend(i)
+                elif self.exhaust_policy == "reject":
+                    self._reject(req)
+                    self._release_slot(i)
+                else:
+                    self._preempt_restart(i, req)
+                continue
+            self.slot_pages[i].append(pid)
+            self.block[i, pj] = pid
 
     def _step_continuous(self) -> bool:
+        self._resumed_now = set()
+        if self.kv_tier == "flash":
+            self._resume_suspended()
         self._admit_continuous()
         if all(s is None for s in self.slots):
             return bool(self.queue)
         self._ensure_pages()
-        active = np.asarray([s is not None for s in self.slots])
+        active_list = [self.slots[i] is not None and not self.suspended[i]
+                       for i in range(self.max_batch)]
+        if not any(active_list):
+            # everything suspended and nothing resumed: with an unbounded
+            # flash tier the head-of-line resume always succeeds within one
+            # step (eviction assist reaches every other suspended slot), but
+            # a FULL bounded tier can wedge — no spill room, no free hot
+            # pages.  After a second consecutive zero-progress step, escape
+            # by restarting the head slot, which frees its pages outright.
+            self._idle_steps += 1
+            if self.resume_order and self._idle_steps >= 2:
+                i = self.resume_order[0]
+                self.stats.pool_exhausted += 1
+                self._preempt_restart(i, self.slots[i])
+                self._idle_steps = 0
+            return True
+        self._idle_steps = 0
+        active = np.asarray(active_list)
         pre_cache = {**self.cache, "block": self.block}  # for re-dispatch
         t0 = time.monotonic()
         logits, cache = self._decode(self.params, self.last_np, pre_cache,
@@ -309,7 +578,7 @@ class ServingEngine:
         self.stats.wall_decode_s += dt
         tok_np = np.asarray(sampler.greedy(logits))  # one sync per step
         for i, req in enumerate(self.slots):
-            if req is None:
+            if req is None or not active_list[i]:
                 continue
             t = int(tok_np[i])
             self.last_np[i] = t

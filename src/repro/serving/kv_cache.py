@@ -1,4 +1,4 @@
-"""Host-side page management for the paged per-slot KV cache.
+"""Host-side page management for the paged / tiered per-slot KV cache.
 
 The device arrays (page pool, block table, length vector) live in the cache
 dict built by ``models.model.init_paged_cache``; admission/free decisions are
@@ -6,14 +6,31 @@ control flow, so the free list stays host-side in the engine.  Page 0 is the
 reserved null page (inactive slots park their writes there) and is never
 handed out.
 
-This split is deliberate: the allocator is the seam where flash-resident KV
-(KVNAND-style page spill to the NAND dies) plugs in later — the block table
-already gives every slot location-independence.
+Two allocators:
+
+* :class:`PageAllocator` — the flat free-list over the *hot* (NPU-DRAM
+  resident) page pool.
+* :class:`TieredPageAllocator` — the two-tier store: the hot pool above plus
+  a *cold* flash tier (the simulated NAND dies of the paper's chiplet).  It
+  tracks per-(slot, page) residency, keeps an LRU queue of eviction-eligible
+  hot pages (oldest non-tail pages of suspended/idle slots first), and holds
+  the spilled page payloads so the engine can prefetch a slot's pages back
+  before its next decode step.  This is the KVNAND-style seam the block table
+  was built for: KV capacity scales past NPU DRAM exactly like the weights
+  do, with spill/prefetch bytes riding the Slice Control channel bubbles
+  (see ``core/schedule.py`` and the "Flash-resident KV pages" design note in
+  ROADMAP.md for the bubble accounting).
+
+The allocator is pure host bookkeeping (payloads are opaque to it — the
+engine hands it numpy page blobs); all device data movement goes through
+``models.model.swap_out_pages`` / ``swap_in_pages``.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
+from typing import Hashable
 
 
 class OutOfPages(RuntimeError):
@@ -28,6 +45,7 @@ class PageAllocator:
 
     def __post_init__(self):
         self._free = list(range(self.num_pages - 1, 0, -1))
+        self._free_set = set(self._free)
 
     @property
     def available(self) -> int:
@@ -37,13 +55,128 @@ class PageAllocator:
         if n > len(self._free):
             raise OutOfPages(f"need {n} pages, {len(self._free)} free")
         out = [self._free.pop() for _ in range(n)]
+        self._free_set.difference_update(out)
         return out
 
     def free(self, pids: list[int]) -> None:
-        for p in pids:
+        seen: set[int] = set()
+        for p in pids:  # validate the whole batch before applying any of it
             if p == 0:
                 raise ValueError("page 0 is the reserved null page")
-            self._free.append(p)
+            if p in self._free_set or p in seen or not 0 < p < self.num_pages:
+                # a double-freed id would be handed out to two slots and
+                # silently corrupt both KV streams
+                raise ValueError(f"page {p} freed twice (or never allocated)")
+            seen.add(p)
+        self._free.extend(pids)
+        self._free_set.update(pids)
+
+
+PageKey = Hashable  # engine uses (slot, page_idx)
+
+
+class TieredPageAllocator:
+    """Two-tier page store: hot device pool + cold flash tier.
+
+    Residency bookkeeping only — the engine performs the device gather /
+    scatter and hands page payloads (opaque host blobs) in and out:
+
+    * ``mark_evictable(key, pid)`` — a hot page becomes an eviction candidate
+      (call in LRU order: oldest page of the least-recently-suspended slot
+      first, tail pages last).
+    * ``pop_evictable(n, exclude)`` — up to ``n`` LRU candidates to spill.
+    * ``store(key, payload)`` / ``fetch(key)`` — the cold store proper.
+    * ``cold_keys(match)`` — cold pages of one slot, for prefetch before its
+      next decode step.
+
+    ``flash_pages`` bounds the cold tier (None = the NAND dies dwarf the KV
+    working set, the paper's regime).
+    """
+
+    def __init__(self, num_pages: int, flash_pages: int | None = None):
+        self.hot = PageAllocator(num_pages)
+        self.flash_pages = flash_pages
+        self._cold: dict[PageKey, object] = {}
+        self._evictable: OrderedDict[PageKey, int] = OrderedDict()
+
+    # -------------------------------------------------------- hot pool
+    @property
+    def available(self) -> int:
+        return self.hot.available
+
+    def alloc(self, n: int = 1) -> list[int]:
+        return self.hot.alloc(n)
+
+    def free(self, pids: list[int]) -> None:
+        self.hot.free(pids)
+
+    # -------------------------------------------------------- residency
+    @property
+    def cold_count(self) -> int:
+        return len(self._cold)
+
+    @property
+    def flash_available(self) -> int | None:
+        """Free cold-tier pages (None = unbounded)."""
+        if self.flash_pages is None:
+            return None
+        return self.flash_pages - len(self._cold)
+
+    @property
+    def evictable_count(self) -> int:
+        return len(self._evictable)
+
+    def mark_evictable(self, key: PageKey, pid: int) -> None:
+        if key in self._evictable or key in self._cold:
+            raise ValueError(f"page {key!r} already evictable/cold")
+        self._evictable[key] = pid
+
+    def pop_evictable(self, n: int,
+                      exclude=None) -> list[tuple[PageKey, int]]:
+        """Up to ``n`` oldest candidates ``(key, hot pid)``, removed from the
+        queue; the caller must spill each one (``store``) and free its pid.
+        ``exclude(key) -> bool`` shields a slot's own pages (used when making
+        room to prefetch that very slot)."""
+        out = []
+        for key in list(self._evictable):
+            if len(out) >= n:
+                break
+            if exclude is not None and exclude(key):
+                continue
+            out.append((key, self._evictable.pop(key)))
+        return out
+
+    # -------------------------------------------------------- cold store
+    def store(self, key: PageKey, payload) -> None:
+        if key in self._cold:
+            raise ValueError(f"page {key!r} already cold")
+        if (self.flash_pages is not None
+                and len(self._cold) >= self.flash_pages):
+            raise OutOfPages(f"flash tier full ({self.flash_pages} pages)")
+        self._cold[key] = payload
+
+    def fetch(self, key: PageKey):
+        """Pop one cold page's payload (the engine scatters it back into a
+        freshly allocated hot page and remaps the block table)."""
+        return self._cold.pop(key)
+
+    def cold_keys(self, match) -> list[PageKey]:
+        """Cold pages with ``match(key)`` true, in insertion (spill) order."""
+        return [k for k in self._cold if match(k)]
+
+    def unmark_slot(self, match) -> None:
+        """Withdraw a resumed slot's remaining eviction candidates (every
+        page of a decoding slot must stay hot until its next suspension)."""
+        for k in [k for k in self._evictable if match(k)]:
+            del self._evictable[k]
+
+    def drop_slot(self, match) -> None:
+        """Forget every page of a finished slot (cold payloads and eviction
+        candidates; the engine frees the hot pids itself)."""
+        for k in [k for k in self._cold if match(k)]:
+            del self._cold[k]
+        for k in [k for k in self._evictable if match(k)]:
+            del self._evictable[k]
 
 
 def pages_needed(n_tokens: int, page_size: int) -> int:

@@ -27,6 +27,8 @@ class TokenTime:
     channel_bytes: float      # bytes that crossed the flash channels (all ch.)
     flash_array_bytes: float  # bytes read out of NAND arrays (energy model)
     stalled_on_reads: float
+    kv_tier_bytes: float = 0.0  # KV spill+prefetch bytes this token (all ch.)
+    kv_bus_s: float = 0.0       # per-channel bus seconds the KV tier used
 
     @property
     def tokens_per_s(self) -> float:
@@ -66,7 +68,13 @@ def decode_token_time(cfg: ModelConfig, flash: FlashSpec,
                       npu: NPUSpec | None = None,
                       alpha_override: float | None = None,
                       tile_override: tiling.TileShape | None = None,
-                      prefetch_bytes: float = 32e6) -> TokenTime:
+                      prefetch_bytes: float = 32e6,
+                      kv_spill_bytes: float = 0.0,
+                      kv_prefetch_bytes: float = 0.0) -> TokenTime:
+    """Simulate one decode token; ``kv_spill_bytes``/``kv_prefetch_bytes``
+    are the token's tiered-KV page traffic (total across channels, e.g. from
+    ``EngineStats.kv_spill_bytes / tokens_out``), accounted as sliced plain
+    write/read requests riding the Slice Control bubbles."""
     npu = npu or DEFAULT_NPU
     act_bytes = 1.0 if bytes_per_elem >= 1.0 else 2.0  # W4A16 -> 16-bit acts
     kv_b = int(act_bytes)
@@ -113,7 +121,11 @@ def decode_token_time(cfg: ModelConfig, flash: FlashSpec,
             dur = _ssm_phase_time(cfg, npu, kv_b)
             npu_phase_time += dur
             items.append(NpuPhase(dur))
-    res = simulate_stream(items, policy, slice_bytes, prefetch_bytes)
+    res = simulate_stream(items, policy, slice_bytes, prefetch_bytes,
+                          kv_write_bytes=kv_spill_bytes / flash.channels,
+                          kv_read_bytes=kv_prefetch_bytes / flash.channels,
+                          kv_bw=flash.bw_channel,
+                          kv_page_bytes=flash.page_bytes)
     return TokenTime(
         total=res.time,
         npu_phase_time=npu_phase_time,
@@ -121,7 +133,29 @@ def decode_token_time(cfg: ModelConfig, flash: FlashSpec,
         channel_bytes=channel_bytes,
         flash_array_bytes=array_bytes,
         stalled_on_reads=res.stalled_on_reads,
+        kv_tier_bytes=kv_spill_bytes + kv_prefetch_bytes,
+        kv_bus_s=res.kv_bus_s,
     )
+
+
+def kv_swap_overhead_s(cfg: ModelConfig, flash: FlashSpec,
+                       kv_spill_bytes: float, kv_prefetch_bytes: float,
+                       **kw) -> float:
+    """Token-latency cost of riding the given per-token KV tier traffic
+    through the channel bubbles: decode time with the traffic minus the
+    all-resident baseline.  Near zero while the bubbles absorb it (the
+    paper's Slice Control headroom), rising once the bus saturates."""
+    base = decode_token_time(cfg, flash, **kw)
+    kv = decode_token_time(cfg, flash, kv_spill_bytes=kv_spill_bytes,
+                           kv_prefetch_bytes=kv_prefetch_bytes, **kw)
+    return kv.total - base.total
+
+
+def kv_page_cost_s(cfg: ModelConfig, flash: FlashSpec,
+                   kv_page_bytes: float, **kw) -> float:
+    """Token-latency cost of ONE evicted KV page (spilled now, prefetched
+    back later) — what the serving engine charges an eviction decision."""
+    return kv_swap_overhead_s(cfg, flash, kv_page_bytes, kv_page_bytes, **kw)
 
 
 def flash_only_token_time(cfg: ModelConfig, flash: FlashSpec,

@@ -50,11 +50,83 @@ def test_page_allocator_reserves_null_page():
         a.free([0])
 
 
+def test_page_allocator_double_free_raises():
+    """A page id freed twice would be handed out to two slots and silently
+    corrupt both KV streams — the guard set must catch it."""
+    a = PageAllocator(6)
+    got = a.alloc(3)
+    a.free(got[:2])
+    with pytest.raises(ValueError):
+        a.free([got[0]])  # already free
+    with pytest.raises(ValueError):
+        a.free([got[2], got[2]])  # duplicate inside one call
+    with pytest.raises(ValueError):
+        a.free([99])  # never allocated (out of range)
+    # a failed batch is atomic: got[2] is still held, nothing leaked
+    assert a.available == 4
+    a.free([got[2]])
+    assert a.available == 5
+    assert sorted(a.alloc(5)) == list(range(1, 6))
+
+
 def test_page_math_helpers():
     assert pages_needed(1, 16) == 1 and pages_needed(16, 16) == 1
     assert pages_needed(17, 16) == 2
     assert prefill_bucket(3) == 8 and prefill_bucket(8) == 8
     assert prefill_bucket(9) == 16
+
+
+def test_page_math_edge_cases():
+    # zero tokens: no pages, bucket stays at the floor
+    assert pages_needed(0, 16) == 0
+    assert prefill_bucket(0) == 8
+    # exact page multiples never round up an extra page
+    for mult in (1, 2, 7):
+        assert pages_needed(mult * 16, 16) == mult
+        assert pages_needed(mult * 16 + 1, 16) == mult + 1
+    # bucket floor above the prompt length wins
+    assert prefill_bucket(3, floor=32) == 32
+    assert prefill_bucket(33, floor=32) == 64
+    # buckets are powers of two times the floor and always cover the prompt
+    for n in range(1, 130):
+        b = prefill_bucket(n)
+        assert b >= n and b % 8 == 0
+
+
+def test_allocator_invariants_property():
+    """Exhaustion/recycle invariants under random alloc/free interleavings
+    (hypothesis when available, the deterministic fallback otherwise)."""
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, strategies as st
+
+    @given(st.integers(2, 40), st.lists(st.integers(0, 6), max_size=40))
+    @settings(max_examples=40, deadline=None)
+    def check(num_pages, ops):
+        a = PageAllocator(num_pages)
+        held: list[int] = []
+        for op in ops:
+            if op == 0 and held:  # free one page
+                a.free([held.pop()])
+            else:
+                n = op % 3 + 1
+                if n <= a.available:
+                    got = a.alloc(n)
+                    assert 0 not in got
+                    assert len(set(got)) == len(got)
+                    assert not set(got) & set(held)  # no double hand-out
+                    held += got
+                else:
+                    with pytest.raises(OutOfPages):
+                        a.alloc(n)
+            assert a.available + len(held) == num_pages - 1
+        # full recycle: everything handed back is allocatable again
+        a.free(held)
+        assert a.available == num_pages - 1
+        assert sorted(a.alloc(num_pages - 1)) == list(range(1, num_pages))
+
+    check()
 
 
 # ------------------------------------------------------------- model layer
