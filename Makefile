@@ -1,6 +1,7 @@
 # Convenience targets; CI runs the same commands (.github/workflows/ci.yml).
 
-.PHONY: test test-fast test-slow bench-serving bench-serving-smoke
+.PHONY: test test-fast test-slow bench-serving bench-serving-smoke \
+	bench-serving-policy
 
 # full tier-1 (ROADMAP verify command)
 test:
@@ -17,6 +18,11 @@ test-slow:
 bench-serving:
 	PYTHONPATH=src python benchmarks/bench_serving.py
 
-# CI smoke: tiny admission + kvtier traces
+# CI smoke: tiny admission + kvtier + policy traces
 bench-serving-smoke:
 	PYTHONPATH=src python benchmarks/bench_serving.py --smoke
+
+# scheduler bake-off only: fcfs/priority/sjf/drr on the capacity-constrained
+# tiered trace, per-policy TTFT/latency percentiles
+bench-serving-policy:
+	PYTHONPATH=src python benchmarks/bench_serving.py --trace policy --smoke

@@ -1,6 +1,6 @@
-"""Serving benchmarks: admission policy and tiered-KV capacity traces.
+"""Serving benchmarks: admission, tiered-KV capacity, and policy traces.
 
-Two traces, both Poisson arrivals:
+Three traces, all Poisson arrivals:
 
 * ``admission`` — wave vs continuous admission.  Wave (the legacy
   shared-cursor cache) only starts new requests when the whole batch drains;
@@ -17,10 +17,18 @@ Two traces, both Poisson arrivals:
   prices its spill/prefetch traffic with the channel simulator
   (``sim.llm_perf.kv_swap_overhead_s``) to show the bubble-bandwidth cost of
   every evicted page.
+* ``policy`` — the scheduler bake-off: mixed prompt lengths (including long
+  prompts that exercise chunked prefill) and mixed priorities race the
+  capacity-constrained tiered pool under each admission policy (fcfs /
+  priority / sjf / drr, ``serving.scheduler``).  Every policy must complete
+  100% of the trace; the report compares per-policy TTFT and latency
+  percentiles, plus per-priority-class TTFT p99 so the priority policy's
+  SLO effect is visible.
 
 Run:  PYTHONPATH=src python benchmarks/bench_serving.py \
           --arch smollm-360m --requests 12 --rate 4 --max-batch 4
       PYTHONPATH=src python benchmarks/bench_serving.py --smoke
+      PYTHONPATH=src python benchmarks/bench_serving.py --trace policy --smoke
 """
 
 from __future__ import annotations
@@ -36,6 +44,7 @@ from repro.configs.registry import get_arch
 from repro.core.hw import CAMBRICON_LLM_S
 from repro.models import model as model_lib
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.scheduler import POLICIES, make_scheduler
 from repro.sim.llm_perf import kv_swap_overhead_s
 
 # a small prompt-length menu keeps the per-shape jit retrace count bounded
@@ -238,6 +247,105 @@ def bench_kvtier(cfg, params, args) -> list[dict]:
     return rows
 
 
+def _policy_prompt_lens(max_seq: int, max_new: int) -> list[int]:
+    """Prompt-length menu for the policy trace; bench_policy sizes the hot
+    pool from this same list, so every request passes the submit guard."""
+    long_lens = (max_seq // 4, max_seq // 2 - max_new)
+    return list(PROMPT_LENS) + [p for p in long_lens
+                                if p > max(PROMPT_LENS)]
+
+
+def make_policy_requests(n: int, cfg, max_new: int, seed: int,
+                         max_seq: int, page_size: int) -> list[Request]:
+    """Mixed trace: short interactive prompts AND long prompts (chunked
+    prefill territory), with priorities 0..2 — the workload where admission
+    policy actually changes TTFT."""
+    rng = np.random.RandomState(seed + 3)
+    lens = _policy_prompt_lens(max_seq, max_new)
+    reqs = []
+    for rid in range(n):
+        plen = int(lens[rid % len(lens)])
+        n_new = int(rng.randint(max(2, max_new // 4), max_new + 1))
+        reqs.append(Request(
+            rid=rid, prompt=rng.randint(0, cfg.vocab_size, size=plen).tolist(),
+            max_new_tokens=n_new, priority=int(rng.randint(0, 3))))
+    return reqs
+
+
+def bench_policy_variant(policy: str, cfg, params, args, pool: int) -> dict:
+    sched = make_scheduler(policy, chunk_tokens=args.chunk_prefill or None)
+    eng = ServingEngine(cfg, params, max_batch=args.max_batch,
+                        max_seq=args.max_seq, eos_id=-1, mode="continuous",
+                        page_size=args.page_size, num_pages=pool + 1,
+                        kv_tier="flash", scheduler=sched)
+    reqs = make_policy_requests(args.requests, cfg, args.max_new, args.seed,
+                                args.max_seq, args.page_size)
+    arrivals = poisson_arrivals(args.requests, args.rate, args.seed)
+    wall = drive(eng, reqs, arrivals)
+    s = eng.stats
+    assert all(r.done for r in reqs)
+    ok = sum(1 for r in reqs if not r.rejected)
+    by_prio = {}
+    for p in sorted({r.priority for r in reqs}):
+        xs = [r.ttft_s for r in reqs if r.priority == p and not r.rejected]
+        by_prio[p] = float(np.percentile(xs, 99)) if xs else 0.0
+    return {
+        "policy": policy, "wall_s": wall,
+        "completed_pct": 100.0 * ok / len(reqs),
+        "tokens": s.tokens_out,
+        "ttft_p50": s.percentiles("ttft_s")["p50"],
+        "ttft_p99": s.percentiles("ttft_s")["p99"],
+        "latency_p50": s.percentiles("latency_s")["p50"],
+        "latency_p99": s.percentiles("latency_s")["p99"],
+        "preemptions": s.preemptions,
+        "prefill_chunks": s.prefill_chunks,
+        "ttft_p99_by_prio": by_prio,
+    }
+
+
+def bench_policy(cfg, params, args) -> list[dict]:
+    """Scheduler bake-off on the capacity-constrained tiered pool."""
+    from repro.serving.kv_cache import pages_needed
+    long_plen = max(_policy_prompt_lens(args.max_seq, args.max_new))
+    per_req = pages_needed(min(args.max_seq, long_plen + args.max_new),
+                           args.page_size)
+    pool = args.pool_pages if args.pool_pages > 0 else per_req + 1
+    print(f"\n[policy] arch={cfg.name} requests={args.requests} "
+          f"hot_pool={pool} pages chunk_prefill="
+          f"{args.chunk_prefill or 'off'} policies={sorted(POLICIES)}")
+
+    # extra warmup: compile the chunked-prefill trace + the tiered paths
+    # once so the per-policy runs measure scheduling, not compilation
+    warm = ServingEngine(cfg, params, max_batch=args.max_batch,
+                         max_seq=args.max_seq, eos_id=-1, mode="continuous",
+                         page_size=args.page_size, num_pages=pool + 1,
+                         kv_tier="flash",
+                         scheduler=make_scheduler(
+                             "fcfs", chunk_tokens=args.chunk_prefill or None))
+    warm.submit(Request(rid=-1, prompt=[1] * long_plen, max_new_tokens=2))
+    warm.run()
+
+    rows = [bench_policy_variant(p, cfg, params, args, pool)
+            for p in sorted(POLICIES)]
+    hdr = ("policy", "wall_s", "done%", "tokens", "ttft_p50", "ttft_p99",
+           "lat_p50", "lat_p99", "preempt", "chunks")
+    print(" ".join(f"{h:>9}" for h in hdr))
+    for r in rows:
+        print(f"{r['policy']:>9} {r['wall_s']:>9.2f} "
+              f"{r['completed_pct']:>9.1f} {r['tokens']:>9d} "
+              f"{r['ttft_p50']:>9.3f} {r['ttft_p99']:>9.3f} "
+              f"{r['latency_p50']:>9.3f} {r['latency_p99']:>9.3f} "
+              f"{r['preemptions']:>9d} {r['prefill_chunks']:>9d}")
+    for r in rows:
+        prio = " ".join(f"p{k}={v:.3f}s"
+                        for k, v in r["ttft_p99_by_prio"].items())
+        print(f"  {r['policy']}: TTFT p99 by priority class: {prio}")
+    for r in rows:
+        assert r["completed_pct"] == 100.0, \
+            f"{r['policy']} dropped requests on the tiered trace"
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
@@ -252,8 +360,12 @@ def main(argv=None):
     ap.add_argument("--pool-pages", type=int, default=0,
                     help="hot KV pool size for the kvtier trace "
                          "(0 = auto, sized below trace demand)")
-    ap.add_argument("--trace", choices=("admission", "kvtier", "all"),
+    ap.add_argument("--trace", choices=("admission", "kvtier", "policy",
+                                        "all"),
                     default="all")
+    ap.add_argument("--chunk-prefill", type=int, default=8,
+                    help="chunked-prefill token budget for the policy "
+                         "trace (0 = one-shot prefill)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny fast preset for CI (overrides sizes)")
     ap.add_argument("--seed", type=int, default=0)
@@ -276,6 +388,8 @@ def main(argv=None):
         out["admission"] = bench_admission(cfg, params, args)
     if args.trace in ("kvtier", "all"):
         out["kvtier"] = bench_kvtier(cfg, params, args)
+    if args.trace in ("policy", "all"):
+        out["policy"] = bench_policy(cfg, params, args)
     return out
 
 

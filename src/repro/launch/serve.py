@@ -1,7 +1,13 @@
-"""Serving driver: batched requests through the continuous-batching engine.
+"""Serving driver over the public Request / RequestOutput contract.
+
+Builds an engine with a pluggable scheduling policy, submits a mixed batch
+of prioritized requests with per-request sampling, and consumes the
+streaming ``RequestOutput`` events as they happen — the same surface a
+network frontend would sit on.
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
-      --requests 8 --max-new 16 --mode continuous
+      --requests 8 --max-new 16 --policy priority --chunk-prefill 8 \
+      --temperature 0.8 --top-k 40 --stream
 """
 
 from __future__ import annotations
@@ -15,6 +21,7 @@ from repro.configs.registry import get_arch
 from repro.models import model as model_lib
 from repro.quant.convert import quantize_params
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.scheduler import POLICIES, SamplingParams, make_scheduler
 
 
 def main():
@@ -31,6 +38,20 @@ def main():
                          "paged KV cache, else wave")
     ap.add_argument("--page-size", type=int, default=16,
                     help="tokens per KV page (continuous mode)")
+    ap.add_argument("--policy", default="fcfs", choices=sorted(POLICIES),
+                    help="admission/preemption policy "
+                         "(serving.scheduler)")
+    ap.add_argument("--chunk-prefill", type=int, default=0,
+                    help="chunked-prefill token budget per step "
+                         "(0 = one-shot prefill)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="per-request sampling temperature (0 = greedy)")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="sampling seed base (request seed = base + rid)")
+    ap.add_argument("--stream", action="store_true",
+                    help="print each RequestOutput token event")
     ap.add_argument("--quant", default="int8", choices=["none", "int8"])
     args = ap.parse_args()
 
@@ -41,19 +62,35 @@ def main():
                                    max_seq=args.max_seq)
     if args.quant == "int8":
         params = quantize_params(params)  # the paper's W8A8 deployment mode
+    scheduler = make_scheduler(
+        args.policy, chunk_tokens=args.chunk_prefill or None)
     eng = ServingEngine(cfg, params, max_batch=args.max_batch,
                         max_seq=args.max_seq, eos_id=-1, mode=args.mode,
-                        page_size=args.page_size)
+                        page_size=args.page_size, scheduler=scheduler)
     rng = jax.random.PRNGKey(42)
     for rid in range(args.requests):
         rng, k = jax.random.split(rng)
         plen = int(jax.random.randint(k, (), 2, 9))
         prompt = [int(t) for t in jax.random.randint(
             k, (plen,), 0, cfg.vocab_size)]
-        eng.submit(Request(rid=rid, prompt=prompt, max_new_tokens=args.max_new))
+        eng.submit(Request(
+            rid=rid, prompt=prompt, max_new_tokens=args.max_new,
+            priority=rid % 3,  # mixed priorities exercise the policy
+            sampling=SamplingParams(temperature=args.temperature,
+                                    top_k=args.top_k, top_p=args.top_p,
+                                    seed=args.seed + rid)))
     t0 = time.time()
-    stats = eng.run()
+    for out in eng.stream():
+        if out.finished:
+            print(f"rid={out.rid} done n_out={out.n_out} "
+                  f"reason={out.finish_reason} "
+                  f"ttft={out.ttft_s if out.ttft_s is not None else -1:.3f}s "
+                  f"chunks={out.sched['chunks']} "
+                  f"preempt={out.sched['preemptions']}")
+        elif args.stream:
+            print(f"rid={out.rid} tok[{out.n_out - 1}]={out.token}")
     dt = time.time() - t0
+    stats = eng.stats
     print(f"requests={args.requests} tokens_out={stats.tokens_out} "
           f"decode_steps={stats.decode_steps} wall={dt:.1f}s "
           f"tok/s={stats.tokens_out/dt:.1f}")

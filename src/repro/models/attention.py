@@ -158,6 +158,33 @@ def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
     return decode_attention(q, k, v, lengths)
 
 
+def paged_chunk_attention(q: jax.Array, k_pages: jax.Array,
+                          v_pages: jax.Array, block_table: jax.Array,
+                          q_positions: jax.Array) -> jax.Array:
+    """Multi-query attention for one chunk of prefill against a paged cache.
+
+    q: [B, C, H, D] chunk queries; k/v_pages: [P, page, Hkv, D];
+    block_table: [B, pages_per_slot]; q_positions: [B, C] global (cache)
+    positions of the chunk queries.  Each query attends exactly the cache
+    positions <= its own — all keys are read from the gathered block row, so
+    a given position's math is independent of how the prompt was split into
+    chunks (the bit-identity contract of chunked prefill; see
+    ``models.model.prefill_chunk_into_slot``).
+    """
+    b, c, h, d = q.shape
+    k, v = gather_paged_kv(k_pages, v_pages, block_table)  # [B, Smax, Hkv, D]
+    k = _repeat_kv(k, h // k.shape[2])
+    v = _repeat_kv(v, h // v.shape[2])
+    s = jnp.einsum("bchd,bshd->bhcs", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (d ** -0.5)
+    key_pos = jnp.arange(k.shape[1])
+    mask = key_pos[None, None, None, :] <= q_positions[:, None, :, None]
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhcs,bshd->bchd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
 def gather_kv_pages(k_pages: jax.Array, v_pages: jax.Array,
                     page_ids: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Pull whole pages out of the pool (spill path of the flash KV tier).

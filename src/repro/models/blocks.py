@@ -8,6 +8,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models.attention import (_repeat_kv, chunked_attention,
                                     decode_attention, gather_kv_pages,
+                                    paged_chunk_attention,
                                     paged_decode_attention, scatter_kv_pages,
                                     write_paged_kv)
 from repro.models.layers import (apply_mrope, apply_rope, init_linear,
@@ -145,6 +146,42 @@ def attn_decode_paged(params: dict, x: jax.Array, cfg: ModelConfig,
     out = paged_decode_attention(q[:, 0], k_pages, v_pages, block_table,
                                  lengths + active.astype(jnp.int32))
     out = linear(params["o"], out.reshape(b, -1))
+    return out, k_pages, v_pages
+
+
+def attn_prefill_chunk_paged(params: dict, x: jax.Array, cfg: ModelConfig,
+                             k_pages: jax.Array, v_pages: jax.Array,
+                             block_row: jax.Array, positions: jax.Array,
+                             valid: jax.Array
+                             ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Chunked-prefill attention for ONE slot against the paged pool.
+
+    x: [1, C, D] chunk hidden states (C is any shape bucket; rows past
+    the chunk carry ``valid=False``); k/v_pages: [P, page, Hkv, Dh];
+    block_row: [pages_per_slot] the slot's block-table row; positions:
+    [1, C] global cache positions (start + arange(C)); valid: [C] bool.
+
+    The chunk's K/V is scattered into the slot's pages FIRST (invalid rows
+    are redirected to the reserved null page 0), then every query attends
+    the gathered block row under a per-position causal mask — so each
+    position's math is identical no matter how the prompt was chunked.
+    Returns (out [1, C, D], new k_pages, new v_pages).
+    """
+    b, c, _ = x.shape
+    q = linear(params["q"], x).reshape(b, c, cfg.n_heads, cfg.d_head)
+    k = linear(params["k"], x).reshape(b, c, cfg.n_kv_heads, cfg.d_head)
+    v = linear(params["v"], x).reshape(b, c, cfg.n_kv_heads, cfg.d_head)
+    q, k = _rope_qk(cfg, q, k, positions)
+    page = k_pages.shape[1]
+    pps = block_row.shape[0]
+    gpos = positions[0]
+    pid = jnp.where(valid, block_row[jnp.clip(gpos // page, 0, pps - 1)], 0)
+    off = gpos % page
+    k_pages = k_pages.at[pid, off].set(k[0].astype(k_pages.dtype))
+    v_pages = v_pages.at[pid, off].set(v[0].astype(v_pages.dtype))
+    out = paged_chunk_attention(q, k_pages, v_pages, block_row[None],
+                                positions)
+    out = linear(params["o"], out.reshape(b, c, -1))
     return out, k_pages, v_pages
 
 

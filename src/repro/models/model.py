@@ -17,6 +17,8 @@ Paged per-slot variants (continuous batching; attention-cache families):
                        extras)                   -> (last_logits [M, V], cache)
     prefill_into_slot(params, cfg, tokens, true_len, cache, slot, extras)
                                                  -> (last_logits [V], cache)
+    prefill_chunk_into_slot(params, cfg, tokens, start, chunk_len, cache,
+                            slot)                -> (last_logits [V], cache)
     decode_step_paged(params, cfg, token, cache, active)
                                                  -> (logits [B, V], cache)
     swap_out_pages(cache, page_ids)              -> (k_pages, v_pages)
@@ -628,6 +630,76 @@ def prefill_into_slot(params: dict, cfg: ModelConfig, tokens: jax.Array,
         params, cfg, tokens, jnp.asarray(true_len, jnp.int32).reshape(1),
         cache, jnp.asarray(slot, jnp.int32).reshape(1), extras)
     return logits[0], cache
+
+
+def supports_chunked_prefill(cfg: ModelConfig) -> bool:
+    """Chunked prefill needs a paged cache AND a 1-D token/position stream
+    (no prepended vision/audio embeddings to split across chunk calls)."""
+    return supports_paged(cfg) and cfg.family in ("dense", "moe")
+
+
+def prefill_chunk_into_slot(params: dict, cfg: ModelConfig,
+                            tokens: jax.Array, start: jax.Array,
+                            chunk_len: jax.Array, cache: dict,
+                            slot: jax.Array) -> tuple[jax.Array, dict]:
+    """Chunked-prefill continuation: process ``chunk_len`` prompt tokens of
+    one slot, starting at cache position ``start``.
+
+    tokens: [C] int32 — the chunk, right-padded to any shape bucket C
+    (the engine uses power-of-two buckets with floor = page size, so traces
+    stay O(log max_seq) and per-chunk compute scales with the budget);
+    start / chunk_len / slot: [] int32, all traced.
+
+    Bit-identity contract: each chunk position's K/V is scattered into the
+    slot's pages FIRST, then attention for the chunk queries runs against
+    the gathered block row (key position <= query position) — exactly the
+    buffer decode reads.  Every position's math is therefore independent of
+    how the prompt was split, so the final cache bits, the returned
+    last-position logits, and every subsequent decode logit are identical
+    for ANY chunk schedule, including the single-chunk (one-shot) case.
+    Pinned by tests/test_chunked_prefill.py.
+
+    Returns (logits [V] at chunk position ``chunk_len - 1``, cache).
+    """
+    if not supports_chunked_prefill(cfg):
+        raise ValueError(
+            f"chunked prefill unsupported for family {cfg.family!r}")
+    c = tokens.shape[0]
+    x = params["embed"][tokens][None]                      # [1, C, D]
+    gpos = jnp.asarray(start, jnp.int32) + jnp.arange(c, dtype=jnp.int32)
+    if cfg.rope_mode == "learned":
+        tbl = params["pos_embed"]
+        x = x + tbl[jnp.clip(gpos, 0, tbl.shape[0] - 1)][None]
+    positions = gpos[None]                                 # [1, C]
+    valid = jnp.arange(c) < chunk_len
+    block_row = cache["block"][slot]
+    f = cfg.family
+
+    def step(h, xs):
+        lp, kp, vp = xs
+        hn = blocks.norm(cfg, lp["attn_norm"], h)
+        attn_out, kp, vp = blocks.attn_prefill_chunk_paged(
+            lp["attn"], hn, cfg, kp, vp, block_row, positions, valid)
+        if cfg.parallel_block:
+            h = h + attn_out + ffn(lp["ffn"], hn, cfg.gated_ffn)
+        else:
+            h = h + attn_out
+            hn2 = blocks.norm(cfg, lp["ffn_norm"], h)
+            if f == "moe":
+                h = h + moe_mod.moe_ffn(lp["moe"], hn2, cfg)
+            else:
+                h = h + ffn(lp["ffn"], hn2, cfg.gated_ffn)
+        return h, (kp, vp)
+
+    x, (ks, vs) = ctx.scan(step, x,
+                           (params["layers"], cache["k"], cache["v"]))
+    cache = {**cache, "k": ks, "v": vs,
+             "lens": cache["lens"].at[slot].set(
+                 jnp.asarray(start + chunk_len, jnp.int32))}
+    idx = jnp.clip(chunk_len - 1, 0, c - 1).reshape(1, 1, 1)
+    x_last = jnp.take_along_axis(x, idx.astype(jnp.int32), axis=1)[:, 0]
+    x_last = blocks.norm(cfg, params["final_norm"], x_last)
+    return lm_head(params, cfg, x_last)[0], cache
 
 
 def decode_step_paged(params: dict, cfg: ModelConfig, token: jax.Array,

@@ -183,6 +183,19 @@ def pages_needed(n_tokens: int, page_size: int) -> int:
     return -(-n_tokens // page_size)
 
 
+def chunk_spans(n_tokens: int, budget: int) -> list[tuple[int, int]]:
+    """Reference chunked-prefill schedule for a FIXED budget: ``(start,
+    length)`` spans of at most ``budget`` tokens tiling the prompt.  The
+    engine derives each span live instead (the budget is a per-step policy
+    decision, free to adapt); this helper is the oracle the bit-identity
+    tests walk — ``models.model.prefill_chunk_into_slot`` guarantees the
+    same logits for EVERY split, so any schedule is a pure pacing choice."""
+    if budget <= 0:
+        raise ValueError(f"chunk budget must be positive, got {budget}")
+    return [(s, min(budget, n_tokens - s))
+            for s in range(0, n_tokens, budget)]
+
+
 def prefill_bucket(n_tokens: int, floor: int = 8) -> int:
     """Pad single-slot prefill lengths to power-of-two buckets so the jitted
     prefill retraces O(log max_seq) times instead of once per prompt length."""
