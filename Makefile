@@ -1,7 +1,11 @@
 # Convenience targets; CI runs the same commands (.github/workflows/ci.yml).
 
-.PHONY: test test-fast test-slow bench-serving bench-serving-smoke \
-	bench-serving-policy
+.PHONY: test test-fast test-slow test-families bench-serving \
+	bench-serving-smoke bench-serving-policy bench-serving-kvtier-mla
+
+# every family where supports_paged() is true — the serving conformance
+# matrix (test ids are fam_<family>, substring-safe: fam_moe != fam_mla_moe)
+FAMILIES := dense moe vlm mla_moe hybrid
 
 # full tier-1 (ROADMAP verify command)
 test:
@@ -15,6 +19,17 @@ test-fast:
 test-slow:
 	python -m pytest -q -m slow
 
+# cross-family serving conformance suite, one family at a time (mirrors the
+# CI family-matrix job): mid-stream-admission oracle, eos/max-token
+# termination, page recycling, streaming terminals, preempt-resume
+# bit-identity — per paged family
+test-families:
+	@set -e; for f in $(FAMILIES); do \
+		echo "=== conformance: $$f ==="; \
+		python -m pytest -x -q tests/test_serving.py \
+			tests/test_tiered_kv.py -k "fam_$$f"; \
+	done
+
 bench-serving:
 	PYTHONPATH=src python benchmarks/bench_serving.py
 
@@ -26,3 +41,10 @@ bench-serving-smoke:
 # tiered trace, per-policy TTFT/latency percentiles
 bench-serving-policy:
 	PYTHONPATH=src python benchmarks/bench_serving.py --trace policy --smoke
+
+# the MLA compressed-page tier: kvtier trace on the reduced
+# deepseek-v2-lite-16b config (pages carry ckv+krope rows; must hit 100%
+# completion bit-identical to the all-resident run)
+bench-serving-kvtier-mla:
+	PYTHONPATH=src python benchmarks/bench_serving.py --smoke \
+		--arch deepseek-v2-lite-16b --trace kvtier

@@ -197,7 +197,7 @@ def bench_kvtier_variant(name: str, cfg, params, args, pool: int) -> dict:
 
 def bench_kvtier(cfg, params, args) -> list[dict]:
     # demand: every request's whole-lifetime page footprint at once
-    from repro.serving.kv_cache import pages_needed
+    from repro.serving.kv_cache import kv_page_elems, pages_needed
     per_req = pages_needed(min(args.max_seq, max(PROMPT_LENS) + args.max_new),
                            args.page_size)
     demand = args.requests * per_req
@@ -244,6 +244,15 @@ def bench_kvtier(cfg, params, args) -> list[dict]:
     print(f"simulated bubble-bandwidth cost: {cost * 1e6:.2f} us/token "
           f"({per_tok_spill + per_tok_fetch:.0f} B/token through the "
           f"Slice Control bubbles)")
+    if cfg.family in ("mla_moe", "hybrid"):
+        # the page-byte accounting is family-aware: MLA spills compressed
+        # ckv+krope rows, hybrid only its shared-attn groups — show how much
+        # cheaper each evicted page is than a full-K/V page of the same arch
+        itemsize = kv_pg // max(1, kv_page_elems(cfg, args.page_size))
+        full = (2 * cfg.n_layers * args.page_size * cfg.n_kv_heads
+                * cfg.d_head * itemsize)
+        print(f"{cfg.family} page: {kv_pg} B vs full-K/V equivalent "
+              f"{full} B — x{full / kv_pg:.1f} cheaper per evicted page")
     return rows
 
 

@@ -1,8 +1,47 @@
-"""Repo-root pytest config: make ``pytest -q`` work without PYTHONPATH=src."""
+"""Repo-root pytest config: make ``pytest -q`` work without PYTHONPATH=src.
+
+Also hosts the cross-family serving conformance fixture ``fam``: one
+representative reduced arch per family where ``models.model.supports_paged``
+is true.  Tests parametrized over it get ids ``fam_<family>``, so
+``pytest -k fam_hybrid`` (or ``make test-families``) runs the whole serving
+contract for a single family.  Session scope: each family's params are
+initialised once and shared by every conformance module.
+"""
 
 import os
 import sys
 
+import pytest
+
 _SRC = os.path.join(os.path.dirname(__file__), "src")
 if _SRC not in sys.path:
     sys.path.insert(0, _SRC)
+
+# one representative arch per paged family — the conformance matrix
+FAMILY_ARCHS = {
+    "dense": "smollm-360m",
+    "moe": "qwen2-moe-a2.7b",
+    "vlm": "qwen2-vl-72b",
+    "mla_moe": "deepseek-v2-lite-16b",
+    "hybrid": "zamba2-7b",
+}
+
+
+def load_family(family: str):
+    import jax
+
+    from repro.configs.registry import ASSIGNED_ARCHS
+    from repro.models import model as M
+
+    cfg = ASSIGNED_ARCHS[FAMILY_ARCHS[family]].reduced()
+    assert cfg.family == family
+    assert M.supports_paged(cfg)
+    params = M.init_params(cfg, jax.random.PRNGKey(0), max_seq=64)
+    return cfg, params
+
+
+@pytest.fixture(scope="session", params=sorted(FAMILY_ARCHS),
+                ids=lambda f: f"fam_{f}")
+def fam(request):
+    cfg, params = load_family(request.param)
+    return request.param, cfg, params

@@ -1,6 +1,8 @@
 """End-to-end serving driver: batched requests, W8A8 weights, continuous
 batching over the paged per-slot KV cache, straggler watchdog — the paper's
-deployment scenario as a server.
+deployment scenario as a server, on the attention/SSM-hybrid family it is
+named for: zamba2's shared-attention KV is paged like any dense cache while
+the per-slot Mamba state lives in the slot-indexed state pool.
 
 With 6 requests and only 2 slots, the paged cache admits each queued request
 the moment a slot frees (single-slot prefill while the other slot keeps
@@ -18,7 +20,7 @@ from repro.models import model as model_lib
 from repro.quant.convert import quantize_params
 from repro.serving.engine import Request, ServingEngine
 
-cfg = get_arch("smollm-360m").reduced()
+cfg = get_arch("zamba2-7b").reduced()  # hybrid: paged shared-attn KV + SSM state pool
 params = model_lib.init_params(cfg, jax.random.PRNGKey(0), max_seq=128)
 params = quantize_params(params)  # the paper's W8A8 deployment mode
 

@@ -131,6 +131,38 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 # ---------------------------------------------------------------------------
 
 
+def gather_paged_rows(pages: jax.Array, block_table: jax.Array) -> jax.Array:
+    """Materialize each slot's contiguous view from ONE page pool.
+
+    pages: [P, page, *row]; block_table: [B, pages_per_slot] int32 page ids
+    (0 = the reserved null page).  Returns [B, Smax, *row] with
+    Smax = pages_per_slot * page.  Row shape is free — [Hkv, D] for a GQA
+    K or V pool, [R] for an MLA compressed-ckv pool, [Dr] for its krope.
+    """
+    b, pages_per_slot = block_table.shape
+    page = pages.shape[1]
+    rest = pages.shape[2:]
+    return pages[block_table].reshape(b, pages_per_slot * page, *rest)
+
+
+def write_paged_rows(pages: jax.Array, rows: jax.Array,
+                     block_table: jax.Array, lengths: jax.Array,
+                     active: jax.Array) -> jax.Array:
+    """Scatter one new token's row per slot into its current page.
+
+    pages: [P, page, *row]; rows: [B, *row] (this step's values); lengths:
+    [B] write positions (= valid length before this token); active: [B]
+    bool.  Inactive slots are redirected to the reserved null page 0 so
+    their garbage never lands in a page owned by a live request.
+    """
+    page = pages.shape[1]
+    b = rows.shape[0]
+    page_idx = block_table[jnp.arange(b), lengths // page]
+    page_idx = jnp.where(active, page_idx, 0)
+    offset = lengths % page
+    return pages.at[page_idx, offset].set(rows.astype(pages.dtype))
+
+
 def gather_paged_kv(k_pages: jax.Array, v_pages: jax.Array,
                     block_table: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Materialize each slot's contiguous KV view from the shared page pool.
@@ -139,11 +171,8 @@ def gather_paged_kv(k_pages: jax.Array, v_pages: jax.Array,
     ids (0 = the reserved null page).  Returns [B, Smax, Hkv, D] with
     Smax = pages_per_slot * page.
     """
-    b, pages_per_slot = block_table.shape
-    _, page, hkv, d = k_pages.shape
-    k = k_pages[block_table].reshape(b, pages_per_slot * page, hkv, d)
-    v = v_pages[block_table].reshape(b, pages_per_slot * page, hkv, d)
-    return k, v
+    return (gather_paged_rows(k_pages, block_table),
+            gather_paged_rows(v_pages, block_table))
 
 
 def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
@@ -222,11 +251,5 @@ def write_paged_kv(k_pages: jax.Array, v_pages: jax.Array, k: jax.Array,
     redirected to the reserved null page 0 so their garbage never lands in a
     page owned by a live request.
     """
-    page = k_pages.shape[1]
-    b = k.shape[0]
-    page_idx = block_table[jnp.arange(b), lengths // page]
-    page_idx = jnp.where(active, page_idx, 0)
-    offset = lengths % page
-    k_pages = k_pages.at[page_idx, offset].set(k.astype(k_pages.dtype))
-    v_pages = v_pages.at[page_idx, offset].set(v.astype(v_pages.dtype))
-    return k_pages, v_pages
+    return (write_paged_rows(k_pages, k, block_table, lengths, active),
+            write_paged_rows(v_pages, v, block_table, lengths, active))

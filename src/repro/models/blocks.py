@@ -8,9 +8,9 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models.attention import (_repeat_kv, chunked_attention,
                                     decode_attention, gather_kv_pages,
-                                    paged_chunk_attention,
+                                    gather_paged_rows, paged_chunk_attention,
                                     paged_decode_attention, scatter_kv_pages,
-                                    write_paged_kv)
+                                    write_paged_kv, write_paged_rows)
 from repro.models.layers import (apply_mrope, apply_rope, init_linear,
                                  layer_norm, linear, rms_norm)
 
@@ -185,16 +185,29 @@ def attn_prefill_chunk_paged(params: dict, x: jax.Array, cfg: ModelConfig,
     return out, k_pages, v_pages
 
 
+def paged_pool_names(cache: dict) -> tuple[str, str]:
+    """The two layer-stacked page pools a paged cache spills/prefetches.
+
+    GQA families page full K/V; MLA pages the compressed (ckv, krope) pair
+    instead — a page row is [page, R] + [page, Dr] rather than
+    2x[page, Hkv, Dh], which is exactly why flash-resident KV is cheapest
+    per token for the MLA family (the spilled bytes shrink with the cache).
+    """
+    return ("ckv", "krope") if "ckv" in cache else ("k", "v")
+
+
 def kv_swap_out(cache: dict, page_ids: jax.Array
                 ) -> tuple[jax.Array, jax.Array]:
     """Spill path of the tiered KV cache: gather whole pages from the pool.
 
-    cache: the paged cache dict (layer-stacked k/v pools); page_ids: [n].
-    Returns page payloads ([L, n, page, Hkv, Dh] x2) bound for the flash
-    tier.  The pool itself is untouched — the freed pids are simply handed
-    back to the hot allocator.
+    cache: the paged cache dict (layer-stacked pools); page_ids: [n].
+    Returns the two page payloads bound for the flash tier —
+    ([L, n, page, Hkv, Dh] x2) for GQA k/v pools, ([L, n, page, R],
+    [L, n, page, Dr]) for MLA ckv/krope.  The pool itself is untouched —
+    the freed pids are simply handed back to the hot allocator.
     """
-    return gather_kv_pages(cache["k"], cache["v"], page_ids)
+    a, b = paged_pool_names(cache)
+    return gather_kv_pages(cache[a], cache[b], page_ids)
 
 
 def kv_swap_in(cache: dict, page_ids: jax.Array, ks: jax.Array,
@@ -206,8 +219,9 @@ def kv_swap_in(cache: dict, page_ids: jax.Array, ks: jax.Array,
     decode math bit-identical to the all-resident run — attention only ever
     sees the gathered values, not the pids.
     """
-    k, v = scatter_kv_pages(cache["k"], cache["v"], page_ids, ks, vs)
-    return {**cache, "k": k, "v": v}
+    a, b = paged_pool_names(cache)
+    pa, pb = scatter_kv_pages(cache[a], cache[b], page_ids, ks, vs)
+    return {**cache, a: pa, b: pb}
 
 
 def cross_attn_decode(params: dict, x: jax.Array, cfg: ModelConfig,
@@ -270,47 +284,102 @@ def mla_full(params: dict, x: jax.Array, cfg: ModelConfig,
     return out, c_kv, k_rope[:, :, 0, :]
 
 
-def mla_decode(params: dict, x: jax.Array, cfg: ModelConfig,
-               ckv_cache: jax.Array, krope_cache: jax.Array, pos: jax.Array
-               ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Absorbed-matrix MLA decode: queries hit the compressed cache directly.
-
-    ckv_cache: [B, Smax, R]; krope_cache: [B, Smax, Dr].
-    Per-token FLOPs scale with R + Dr instead of H*(Dn+Dr) cache width.
-    """
+def _mla_decode_qkv(params: dict, x: jax.Array, cfg: ModelConfig,
+                    posb: jax.Array):
+    """Shared decode-token projections: (q_nope, roped q_rope, normed c_kv,
+    roped k_rope) for one token per lane at per-lane positions ``posb``
+    ([B, 1])."""
     b = x.shape[0]
     h, r = cfg.n_heads, cfg.kv_lora_rank
-    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    dn, dr = cfg.qk_nope_dim, cfg.qk_rope_dim
     q = linear(params["q"], x).reshape(b, h, dn + dr)
     q_nope, q_rope = jnp.split(q, [dn], axis=-1)
     kv = linear(params["kv_a"], x)
     c_kv, k_rope = jnp.split(kv, [r], axis=-1)
     c_kv = rms_norm(c_kv, params["kv_a_norm"], cfg.norm_eps)
-    posb = jnp.broadcast_to(jnp.asarray(pos).reshape(1, 1), (b, 1))
     q_rope = apply_rope(q_rope[:, None], posb, cfg.rope_theta)[:, 0]
     k_rope = apply_rope(k_rope[:, None, None, :], posb, cfg.rope_theta)[:, 0, 0]
-    ckv_cache = jax.lax.dynamic_update_slice_in_dim(
-        ckv_cache, c_kv[:, None].astype(ckv_cache.dtype), pos, axis=1)
-    krope_cache = jax.lax.dynamic_update_slice_in_dim(
-        krope_cache, k_rope[:, None].astype(krope_cache.dtype), pos, axis=1)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_absorbed_attend(params: dict, x: jax.Array, cfg: ModelConfig,
+                         q_nope: jax.Array, q_rope: jax.Array,
+                         ckv: jax.Array, krope: jax.Array,
+                         valid_len: jax.Array) -> jax.Array:
+    """Absorbed-matrix attention against a contiguous compressed cache view.
+
+    ckv: [B, Smax, R]; krope: [B, Smax, Dr]; valid_len: [] or [B] tokens
+    (new token included).  Per-token FLOPs scale with R + Dr instead of the
+    H*(Dn+Dr) decompressed cache width.
+    """
+    b = x.shape[0]
+    h, r = cfg.n_heads, cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
     # absorb W_UK into the query: q_c[b,h,r] = q_nope . W_uk
     from repro.models.layers import dense_weight
     wkb = dense_weight(params["kv_b"]).reshape(r, h, dn + dv)
     w_uk, w_uv = wkb[..., :dn], wkb[..., dn:]
     q_c = jnp.einsum("bhd,rhd->bhr", q_nope.astype(jnp.float32),
                      w_uk.astype(jnp.float32))
-    scores = (jnp.einsum("bhr,bsr->bhs", q_c, ckv_cache.astype(jnp.float32))
+    scores = (jnp.einsum("bhr,bsr->bhs", q_c, ckv.astype(jnp.float32))
               + jnp.einsum("bhd,bsd->bhs", q_rope.astype(jnp.float32),
-                           krope_cache.astype(jnp.float32)))
+                           krope.astype(jnp.float32)))
     scores = scores * ((dn + dr) ** -0.5)
-    smax = ckv_cache.shape[1]
-    valid = jnp.arange(smax)[None, :] < (pos + 1)
+    smax = ckv.shape[1]
+    valid = jnp.arange(smax)[None, :] < jnp.asarray(valid_len).reshape(-1, 1)
     scores = jnp.where(valid[:, None, :], scores, -1e30)
     p = jax.nn.softmax(scores, axis=-1)
-    ctx = jnp.einsum("bhs,bsr->bhr", p, ckv_cache.astype(jnp.float32))
+    ctx = jnp.einsum("bhs,bsr->bhr", p, ckv.astype(jnp.float32))
     out = jnp.einsum("bhr,rhd->bhd", ctx, w_uv.astype(jnp.float32))
-    out = linear(params["o"], out.reshape(b, -1).astype(x.dtype))
+    return linear(params["o"], out.reshape(b, -1).astype(x.dtype))
+
+
+def mla_decode(params: dict, x: jax.Array, cfg: ModelConfig,
+               ckv_cache: jax.Array, krope_cache: jax.Array, pos: jax.Array
+               ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Absorbed-matrix MLA decode: queries hit the compressed cache directly.
+
+    ckv_cache: [B, Smax, R]; krope_cache: [B, Smax, Dr].
+    """
+    b = x.shape[0]
+    posb = jnp.broadcast_to(jnp.asarray(pos).reshape(1, 1), (b, 1))
+    q_nope, q_rope, c_kv, k_rope = _mla_decode_qkv(params, x, cfg, posb)
+    ckv_cache = jax.lax.dynamic_update_slice_in_dim(
+        ckv_cache, c_kv[:, None].astype(ckv_cache.dtype), pos, axis=1)
+    krope_cache = jax.lax.dynamic_update_slice_in_dim(
+        krope_cache, k_rope[:, None].astype(krope_cache.dtype), pos, axis=1)
+    out = _mla_absorbed_attend(params, x, cfg, q_nope, q_rope, ckv_cache,
+                               krope_cache, pos + 1)
     return out, ckv_cache, krope_cache
+
+
+def mla_decode_paged(params: dict, x: jax.Array, cfg: ModelConfig,
+                     ckv_pages: jax.Array, krope_pages: jax.Array,
+                     block_table: jax.Array, lengths: jax.Array,
+                     active: jax.Array
+                     ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One-token MLA decode against a paged compressed cache.
+
+    ckv_pages: [P, page, R]; krope_pages: [P, page, Dr]; block_table: [B,
+    pages_per_slot]; lengths: [B] per-slot valid lengths (the new token's
+    write position); active: [B] bool.  Pages carry compressed
+    [page, R + Dr] rows instead of full K/V, and decode attends the gathered
+    compressed block row — the math the all-resident ``mla_decode`` does,
+    with per-slot positions instead of the shared cursor.
+
+    Returns (out [B, D], new ckv_pages, new krope_pages)."""
+    b = x.shape[0]
+    posb = lengths.reshape(b, 1)
+    q_nope, q_rope, c_kv, k_rope = _mla_decode_qkv(params, x, cfg, posb)
+    ckv_pages = write_paged_rows(ckv_pages, c_kv, block_table, lengths,
+                                 active)
+    krope_pages = write_paged_rows(krope_pages, k_rope, block_table, lengths,
+                                   active)
+    ckv = gather_paged_rows(ckv_pages, block_table)      # [B, Smax, R]
+    krope = gather_paged_rows(krope_pages, block_table)  # [B, Smax, Dr]
+    out = _mla_absorbed_attend(params, x, cfg, q_nope, q_rope, ckv, krope,
+                               lengths + jnp.asarray(active, jnp.int32))
+    return out, ckv_pages, krope_pages
 
 
 # ---------------------------------------------------------------------------

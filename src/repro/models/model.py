@@ -11,7 +11,9 @@ Public API (all pure functions):
     prefill(params, cfg, tokens, cache, extras)  -> (last_logits, cache)
     decode_step(params, cfg, token, cache)       -> (logits, cache)
 
-Paged per-slot variants (continuous batching; attention-cache families):
+Paged per-slot variants (continuous batching; dense/vlm/moe page full K/V,
+mla_moe pages the compressed ckv+krope rows, hybrid pages the shared-attn
+KV and keeps Mamba state in a slot-indexed state pool):
     init_paged_cache(cfg, slots, max_seq, dtype, page_size)   -> cache
     prefill_into_slots(params, cfg, tokens, true_lens, cache, slot_ids,
                        extras)                   -> (last_logits [M, V], cache)
@@ -399,9 +401,27 @@ def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
 
 
 def supports_paged(cfg: ModelConfig) -> bool:
-    """Paged serving needs a plain attention KV cache (no recurrent state
-    entangled with the shared cursor)."""
-    return cfg.family in ("dense", "vlm", "moe")
+    """Paged serving needs per-slot cache storage the block table can
+    relocate: plain attention K/V (dense/vlm/moe), the MLA compressed
+    ckv/krope pair (paged the same way, just thinner rows), or the hybrid
+    family's shared-attention KV (its Mamba state lives in a slot-indexed
+    state pool instead — recurrent state never pages).  Pure-SSM and
+    encoder-decoder families keep the shared cursor."""
+    return cfg.family in ("dense", "vlm", "moe", "mla_moe", "hybrid")
+
+
+def has_slot_state(cfg: ModelConfig) -> bool:
+    """True when the paged cache carries per-slot recurrent state (the
+    hybrid family's Mamba conv window + SSM state) that the engine must
+    checkpoint/restore across preempt-resume."""
+    return cfg.family == "hybrid"
+
+
+def _hybrid_layout(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(n_groups, layers_per_group, tail_layers) of the zamba2-style stack."""
+    every = cfg.shared_attn_every
+    n_groups = cfg.n_layers // every
+    return n_groups, every, cfg.n_layers - n_groups * every
 
 
 def init_paged_cache(cfg: ModelConfig, num_slots: int, max_seq: int,
@@ -409,13 +429,22 @@ def init_paged_cache(cfg: ModelConfig, num_slots: int, max_seq: int,
                      num_pages: int | None = None) -> dict:
     """Block-table KV cache: a shared page pool + per-slot state.
 
-    Layout:
-      k/v    [L, P, page, Hkv, Dh]  — the page pool.  Page 0 is the reserved
-                                      *null page*: inactive slots park their
-                                      writes there so freed pages can be
-                                      handed to other requests immediately.
+    Layout (family-dependent page pools, one shared block table):
+      dense/vlm/moe:  k/v    [L, P, page, Hkv, Dh]
+      mla_moe:        ckv    [L, P, page, R]      — pages carry COMPRESSED
+                      krope  [L, P, page, Dr]       [page, R + Dr] rows; MLA
+                                                    decode attends the
+                                                    gathered compressed row
+      hybrid:         k/v    [G, P, page, Hkv, Dh] — only the shared-attn
+                                                    applications carry KV
+                      mamba  {conv, state} pools with a leading [G, every,
+                             slots] / [tail, slots] axis — the slot-indexed
+                             SSM state pool; recurrent state never pages
       block  [slots, pages_per_slot] int32 page ids (0 where unallocated).
       lens   [slots] int32 per-slot valid lengths.
+
+    Page 0 is the reserved *null page*: inactive slots park their writes
+    there so freed pages can be handed to other requests immediately.
 
     By default P is sized so a full complement of max-length slots always
     fits; ``num_pages`` caps the *hot* pool below that (KV demand > NPU DRAM,
@@ -430,15 +459,42 @@ def init_paged_cache(cfg: ModelConfig, num_slots: int, max_seq: int,
     pages_per_slot = -(-max_seq // page_size)
     if num_pages is None:
         num_pages = num_slots * pages_per_slot + 1
+    base = {"block": jnp.zeros((num_slots, pages_per_slot), jnp.int32),
+            "lens": jnp.zeros((num_slots,), jnp.int32)}
+    f = cfg.family
+    if f == "mla_moe":
+        nl = cfg.n_layers
+        return {"ckv": jnp.zeros((nl, num_pages, page_size,
+                                  cfg.kv_lora_rank), dtype),
+                "krope": jnp.zeros((nl, num_pages, page_size,
+                                    cfg.qk_rope_dim), dtype),
+                **base}
+    if f == "hybrid":
+        n_groups, every, tail = _hybrid_layout(cfg)
+        one = ssm_mod.init_mamba_cache(cfg, num_slots, dtype)
+
+        def rep(tree, *dims):
+            return jax.tree.map(
+                lambda a: jnp.zeros(tuple(dims) + a.shape, a.dtype), tree)
+        kv = (n_groups, num_pages, page_size, cfg.n_kv_heads, cfg.d_head)
+        return {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype),
+                "mamba": rep(one, n_groups, every),
+                "tail": rep(one, tail) if tail else None,
+                **base}
     shape = (cfg.n_layers, num_pages, page_size, cfg.n_kv_heads, cfg.d_head)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
-            "block": jnp.zeros((num_slots, pages_per_slot), jnp.int32),
-            "lens": jnp.zeros((num_slots,), jnp.int32)}
+            **base}
+
+
+def paged_pool_dtype(cache: dict):
+    """dtype of the page pools (the bytes that move on spill/prefetch)."""
+    return cache["ckv" if "ckv" in cache else "k"].dtype
 
 
 def paged_slot_capacity(cache: dict) -> int:
     """Max tokens one slot can hold (pages_per_slot * page_size)."""
-    return cache["block"].shape[1] * cache["k"].shape[2]
+    pool = cache["ckv" if "ckv" in cache else "k"]
+    return cache["block"].shape[1] * pool.shape[2]
 
 
 def swap_out_pages(cache: dict, page_ids: jax.Array
@@ -455,13 +511,47 @@ def swap_in_pages(cache: dict, page_ids: jax.Array, ks: jax.Array,
     return blocks.kv_swap_in(cache, page_ids, ks, vs)
 
 
+def checkpoint_slot_state(cache: dict, slot: int):
+    """Snapshot one slot's recurrent state (hybrid Mamba conv window + SSM
+    state) as host arrays — the engine's preempt seam.  KV pages relocate
+    through the flash tier; the state pool stays device-resident and masked,
+    so this checkpoint is the belt-and-braces guarantee that a suspended
+    slot resumes bit-identical no matter what ran in between.  Returns None
+    for families without per-slot recurrent state."""
+    if "mamba" not in cache:
+        return None
+    import numpy as np
+    out = {"mamba": jax.tree.map(lambda a: np.asarray(a[:, :, slot]),
+                                 cache["mamba"])}
+    if cache.get("tail") is not None:
+        out["tail"] = jax.tree.map(lambda a: np.asarray(a[:, slot]),
+                                   cache["tail"])
+    return out
+
+
+def restore_slot_state(cache: dict, slot: int, ckpt) -> dict:
+    """Write a ``checkpoint_slot_state`` snapshot back into the slot's rows
+    of the state pool (resume path)."""
+    if ckpt is None:
+        return cache
+    cache = {**cache, "mamba": jax.tree.map(
+        lambda pool, row: pool.at[:, :, slot].set(
+            jnp.asarray(row, pool.dtype)), cache["mamba"], ckpt["mamba"])}
+    if ckpt.get("tail") is not None and cache.get("tail") is not None:
+        cache = {**cache, "tail": jax.tree.map(
+            lambda pool, row: pool.at[:, slot].set(
+                jnp.asarray(row, pool.dtype)), cache["tail"], ckpt["tail"])}
+    return cache
+
+
 def kv_page_bytes(cfg: ModelConfig, page_size: int,
                   dtype=jnp.bfloat16) -> int:
     """Bytes one KV page moves across the NAND channels when spilled or
-    prefetched: K and V, all layers, page_size tokens."""
-    itemsize = jnp.dtype(dtype).itemsize
-    return (2 * cfg.n_layers * page_size * cfg.n_kv_heads * cfg.d_head
-            * itemsize)
+    prefetched — per-family: full K/V for GQA pools, the compressed
+    ckv+krope rows for MLA, shared-attention groups only for hybrid
+    (``serving.kv_cache.kv_page_elems`` is the single source of truth)."""
+    from repro.serving.kv_cache import kv_page_elems
+    return kv_page_elems(cfg, page_size) * jnp.dtype(dtype).itemsize
 
 
 # ---------------------------------------------------------------------------
@@ -590,30 +680,93 @@ def prefill_into_slots(params: dict, cfg: ModelConfig, tokens: jax.Array,
     positions = _positions(cfg, m, s)
     if not supports_paged(cfg):
         raise ValueError(f"paged prefill unsupported for family {cfg.family!r}")
-    layer_full = _moe_layer_full if cfg.family == "moe" else _dense_layer_full
-
-    def step(h, xs):
-        lp, _ = xs
-        h, (k, v) = layer_full(lp, h, cfg, positions)
-        return h, (k, v)
-
-    x, (ks, vs) = ctx.scan(step, x, (params["layers"], None))
-    # ks/vs: [L, M, S, Hkv, Dh] -> page-shaped [L, M, n_pages, page, Hkv, Dh]
-    nl, _, _, hkv, dh = ks.shape
-    page = cache["k"].shape[2]
-    n_pages = -(-s // page)
-    pad = n_pages * page - s
-    if pad:
-        widths = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
-        ks, vs = jnp.pad(ks, widths), jnp.pad(vs, widths)
-    ks = ks.reshape(nl, m, n_pages, page, hkv, dh).astype(cache["k"].dtype)
-    vs = vs.reshape(nl, m, n_pages, page, hkv, dh).astype(cache["v"].dtype)
-    pids = cache["block"][slot_ids][:, :n_pages]                  # [M, n_pages]
     true_lens = jnp.asarray(true_lens, jnp.int32)
-    cache = {**cache,
-             "k": cache["k"].at[:, pids].set(ks),
-             "v": cache["v"].at[:, pids].set(vs),
-             "lens": cache["lens"].at[slot_ids].set(true_lens)}
+    page = paged_slot_capacity(cache) // cache["block"].shape[1]
+    n_pages = -(-s // page)
+    pids = cache["block"][slot_ids][:, :n_pages]                  # [M, n_pages]
+
+    def to_pages(arr, pool):
+        # arr: [L, M, S, *row] -> page-shaped [L, M, n_pages, page, *row]
+        pad = n_pages * page - s
+        if pad:
+            widths = [(0, 0)] * arr.ndim
+            widths[2] = (0, pad)
+            arr = jnp.pad(arr, widths)
+        return arr.reshape(arr.shape[0], m, n_pages, page,
+                           *arr.shape[3:]).astype(pool.dtype)
+
+    f = cfg.family
+    if f in ("dense", "vlm", "moe"):
+        layer_full = _moe_layer_full if f == "moe" else _dense_layer_full
+
+        def step(h, xs):
+            lp, _ = xs
+            h, (k, v) = layer_full(lp, h, cfg, positions)
+            return h, (k, v)
+
+        x, (ks, vs) = ctx.scan(step, x, (params["layers"], None))
+        cache = {**cache,
+                 "k": cache["k"].at[:, pids].set(to_pages(ks, cache["k"])),
+                 "v": cache["v"].at[:, pids].set(to_pages(vs, cache["v"]))}
+    elif f == "mla_moe":
+        # page the COMPRESSED cache: ckv [L, M, S, R] + krope [L, M, S, Dr]
+        def dstep(h, lp):
+            h, kv = _mla_layer_full(lp, h, cfg, positions, True)
+            return h, kv
+
+        def mstep(h, lp):
+            h, kv = _mla_layer_full(lp, h, cfg, positions, False)
+            return h, kv
+
+        x, (ckv_d, kr_d) = ctx.scan(dstep, x, params["dense_layers"])
+        x, (ckv_m, kr_m) = ctx.scan(mstep, x, params["layers"])
+        ckv = jnp.concatenate([ckv_d, ckv_m], 0)
+        krope = jnp.concatenate([kr_d, kr_m], 0)
+        cache = {**cache,
+                 "ckv": cache["ckv"].at[:, pids].set(
+                     to_pages(ckv, cache["ckv"])),
+                 "krope": cache["krope"].at[:, pids].set(
+                     to_pages(krope, cache["krope"]))}
+    elif f == "hybrid":
+        # right-padded rows: the SSM recurrence (unlike causal attention)
+        # would fold trailing pads into the state, so pad positions get
+        # dt=0 (identity state update) and the decode conv window is
+        # gathered at each row's OWN length, not the batch bucket's tail
+        valid = jnp.arange(s)[None, :] < true_lens[:, None]
+
+        def mamba_step(h, xs):
+            lp, _ = xs
+            out, state = ssm_mod.mamba_block(lp, h, cfg, valid=valid)
+            conv = ssm_mod.conv_tail_at(lp, h, cfg, true_lens)
+            return h + out, {"conv": conv, "state": state}
+
+        def group_step(h, xs):
+            gp, _ = xs
+            h, mcache = ctx.scan(mamba_step, h, (gp, None))
+            h, (k, v) = _dense_layer_full(params["shared"], h, cfg, positions)
+            return h, (mcache, k, v)
+
+        x, (mcaches, ks, vs) = ctx.scan(group_step, x,
+                                        (params["groups"], None))
+        tail_cache = cache["tail"]
+        if params.get("tail") is not None:
+            x, new_tail = ctx.scan(mamba_step, x, (params["tail"], None))
+            # [tail, M, ...] rows scatter into the [tail, slots, ...] pool
+            tail_cache = jax.tree.map(
+                lambda pool, row: pool.at[:, slot_ids].set(
+                    row.astype(pool.dtype)), cache["tail"], new_tail)
+        # mcaches: [G, every, M, ...] -> slot rows of the [G, every, slots,
+        # ...] state pool (duplicate slot_ids from group padding write
+        # identical values, so the scatter stays deterministic)
+        mamba_pool = jax.tree.map(
+            lambda pool, row: pool.at[:, :, slot_ids].set(
+                row.astype(pool.dtype)), cache["mamba"], mcaches)
+        cache = {**cache, "mamba": mamba_pool, "tail": tail_cache,
+                 "k": cache["k"].at[:, pids].set(to_pages(ks, cache["k"])),
+                 "v": cache["v"].at[:, pids].set(to_pages(vs, cache["v"]))}
+    else:
+        raise ValueError(f)
+    cache = {**cache, "lens": cache["lens"].at[slot_ids].set(true_lens)}
     x_last = jnp.take_along_axis(
         x, (true_lens - 1)[:, None, None].astype(jnp.int32), axis=1)[:, 0]
     x_last = blocks.norm(cfg, params["final_norm"], x_last)
@@ -725,27 +878,89 @@ def decode_step_paged(params: dict, cfg: ModelConfig, token: jax.Array,
         x = x + params["pos_embed"][lens]
     f = cfg.family
 
-    def step(h, xs):
-        lp, kp, vp = xs
-        hn = blocks.norm(cfg, lp["attn_norm"], h)
-        attn_out, kp, vp = blocks.attn_decode_paged(
-            lp["attn"], hn, cfg, kp, vp, cache["block"], lens, active)
-        if cfg.parallel_block:
-            fo = ffn(lp["ffn"], hn, cfg.gated_ffn)
-            h = h + attn_out + fo
-        else:
-            h = h + attn_out
-            hn2 = blocks.norm(cfg, lp["ffn_norm"], h)
-            if f == "moe":
-                h = h + moe_mod.moe_ffn(lp["moe"], hn2[:, None], cfg)[:, 0]
+    if f in ("dense", "vlm", "moe"):
+        def step(h, xs):
+            lp, kp, vp = xs
+            hn = blocks.norm(cfg, lp["attn_norm"], h)
+            attn_out, kp, vp = blocks.attn_decode_paged(
+                lp["attn"], hn, cfg, kp, vp, cache["block"], lens, active)
+            if cfg.parallel_block:
+                fo = ffn(lp["ffn"], hn, cfg.gated_ffn)
+                h = h + attn_out + fo
             else:
-                h = h + ffn(lp["ffn"], hn2, cfg.gated_ffn)
-        return h, (kp, vp)
+                h = h + attn_out
+                hn2 = blocks.norm(cfg, lp["ffn_norm"], h)
+                if f == "moe":
+                    h = h + moe_mod.moe_ffn(lp["moe"], hn2[:, None], cfg)[:, 0]
+                else:
+                    h = h + ffn(lp["ffn"], hn2, cfg.gated_ffn)
+            return h, (kp, vp)
 
-    x, (ks, vs) = ctx.scan(step, x,
-                           (params["layers"], cache["k"], cache["v"]))
-    cache = {**cache, "k": ks, "v": vs,
-             "lens": lens + active.astype(jnp.int32)}
+        x, (ks, vs) = ctx.scan(step, x,
+                               (params["layers"], cache["k"], cache["v"]))
+        cache = {**cache, "k": ks, "v": vs}
+    elif f == "mla_moe":
+        def make_step(dense):
+            def step(h, xs):
+                lp, ckv_p, kr_p = xs
+                hn = blocks.norm(cfg, lp["attn_norm"], h)
+                attn_out, ckv_p, kr_p = blocks.mla_decode_paged(
+                    lp["attn"], hn, cfg, ckv_p, kr_p, cache["block"], lens,
+                    active)
+                h = h + attn_out
+                hn2 = blocks.norm(cfg, lp["ffn_norm"], h)
+                if dense:
+                    h = h + ffn(lp["ffn"], hn2, cfg.gated_ffn)
+                else:
+                    h = h + moe_mod.moe_ffn(lp["moe"], hn2[:, None], cfg)[:, 0]
+                return h, (ckv_p, kr_p)
+            return step
+        kd = cfg.first_k_dense
+        x, (ckv_d, kr_d) = ctx.scan(
+            make_step(True), x,
+            (params["dense_layers"], cache["ckv"][:kd], cache["krope"][:kd]))
+        x, (ckv_m, kr_m) = ctx.scan(
+            make_step(False), x,
+            (params["layers"], cache["ckv"][kd:], cache["krope"][kd:]))
+        cache = {**cache,
+                 "ckv": jnp.concatenate([ckv_d, ckv_m], 0),
+                 "krope": jnp.concatenate([kr_d, kr_m], 0)}
+    elif f == "hybrid":
+        # Mamba state updates are masked by ``active`` (a suspended slot's
+        # conv window and SSM state stay bit-identical until resume) and the
+        # shared-attention KV goes through the same block-table indirection
+        # as every other family
+        def mamba_step(h, xs):
+            lp, mc = xs
+            out, mc = ssm_mod.mamba_decode_step(lp, h, mc, cfg,
+                                                active=active)
+            return h + out, mc
+
+        def group_step(h, xs):
+            gp, mc, kp, vp = xs
+            h, mc = ctx.scan(mamba_step, h, (gp, mc))
+            hn = blocks.norm(cfg, params["shared"]["attn_norm"], h)
+            attn_out, kp, vp = blocks.attn_decode_paged(
+                params["shared"]["attn"], hn, cfg, kp, vp, cache["block"],
+                lens, active)
+            h = h + attn_out
+            h = h + ffn(params["shared"]["ffn"],
+                        blocks.norm(cfg, params["shared"]["ffn_norm"], h),
+                        cfg.gated_ffn)
+            return h, (mc, kp, vp)
+
+        x, (mcaches, ks, vs) = ctx.scan(
+            group_step, x,
+            (params["groups"], cache["mamba"], cache["k"], cache["v"]))
+        tail_cache = cache["tail"]
+        if params.get("tail") is not None:
+            x, tail_cache = ctx.scan(mamba_step, x,
+                                     (params["tail"], cache["tail"]))
+        cache = {**cache, "mamba": mcaches, "tail": tail_cache,
+                 "k": ks, "v": vs}
+    else:
+        raise ValueError(f)
+    cache = {**cache, "lens": lens + active.astype(jnp.int32)}
     x = blocks.norm(cfg, params["final_norm"], x)
     return lm_head(params, cfg, x), cache
 
@@ -757,6 +972,8 @@ def _conv_tail(h, lp, cfg: ModelConfig):
     g, n = cfg.ssm_ngroups, cfg.ssm_state
     xbc = z_xbc_dt[..., d_in:d_in + d_in + 2 * g * n]
     return xbc
+
+
 
 
 def _cache_max_seq(cfg: ModelConfig, cache: dict) -> int:

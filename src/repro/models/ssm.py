@@ -139,9 +139,17 @@ def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
 
 def mamba_block(params: dict, x: jax.Array, cfg: ModelConfig,
                 chunk: int = 128,
-                init_state: jax.Array | None = None
+                init_state: jax.Array | None = None,
+                valid: jax.Array | None = None
                 ) -> tuple[jax.Array, jax.Array]:
-    """Full-sequence mamba2 block. x: [B, S, D] -> ([B, S, D], final_state)."""
+    """Full-sequence mamba2 block. x: [B, S, D] -> ([B, S, D], final_state).
+
+    ``valid`` ([B, S] bool) zeroes the dt of pad positions, which makes their
+    state update the identity (decay exp(0)=1, zero input) — a RIGHT-padded
+    batch row therefore ends the scan with exactly the state of its valid
+    prefix.  Outputs at invalid positions are garbage (callers mask them);
+    valid positions are untouched because the recurrence only flows forward.
+    """
     d_in = cfg.d_inner
     g, n, hh, p = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
     bsz, s, _ = x.shape
@@ -149,6 +157,8 @@ def mamba_block(params: dict, x: jax.Array, cfg: ModelConfig,
     xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
     xs, b_mat, c_mat = jnp.split(xbc, [d_in, d_in + g * n], axis=-1)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # [B,S,H]
+    if valid is not None:
+        dt = jnp.where(valid[..., None], dt, 0.0)
     a = -jnp.exp(params["a_log"])[None, None, :] * dt  # log decay, negative
     xh = xs.reshape(bsz, s, hh, p)
     xin = xh * dt[..., None].astype(xh.dtype)
@@ -163,8 +173,17 @@ def mamba_block(params: dict, x: jax.Array, cfg: ModelConfig,
 
 
 def mamba_decode_step(params: dict, x: jax.Array, cache: dict,
-                      cfg: ModelConfig) -> tuple[jax.Array, dict]:
-    """One-token step. x: [B, D]; cache: {"conv": [B,K-1,C], "state": [B,H,P,N]}."""
+                      cfg: ModelConfig,
+                      active: jax.Array | None = None
+                      ) -> tuple[jax.Array, dict]:
+    """One-token step. x: [B, D]; cache: {"conv": [B,K-1,C], "state": [B,H,P,N]}.
+
+    ``active`` ([B] bool) freezes inactive lanes' recurrent state: their conv
+    window and SSM state come back bit-identical (a suspended serving slot
+    must be able to resume exactly where it stopped; the analogue of the
+    paged-attention null-page redirect).  Their y output is garbage, like any
+    inactive lane's — callers ignore it.
+    """
     d_in = cfg.d_inner
     g, n, hh, p = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
     bsz = x.shape[0]
@@ -186,7 +205,38 @@ def mamba_decode_step(params: dict, x: jax.Array, cache: dict,
     y = y.reshape(bsz, d_in)
     y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
     y = rms_norm(y, params["norm"], cfg.norm_eps)
+    if active is not None:
+        am = jnp.asarray(active, bool)
+        new_conv = jnp.where(am[:, None, None], new_conv, cache["conv"])
+        new_state = jnp.where(am[:, None, None, None], new_state,
+                              cache["state"])
     return linear(params["out_proj"], y), {"conv": new_conv, "state": new_state}
+
+
+def conv_tail_at(params: dict, h: jax.Array, cfg: ModelConfig,
+                 true_lens: jax.Array) -> jax.Array:
+    """Per-row decode conv window from a right-padded prefill pass.
+
+    h: [B, S, D] layer input; true_lens: [B] valid lengths.  Returns
+    [B, K-1, C] — the PRE-activation conv inputs at the last K-1 *valid*
+    positions of each row, zeroed where the row is shorter than the window
+    (matching the zero-initialised conv cache).  The fixed tail slice the
+    shared-cursor prefill takes would read pad junk for any row shorter
+    than the batch bucket, so the paged path gathers at each row's own
+    length — and it gathers the [B, K-1, D] input window FIRST, so in_proj
+    runs over K-1 positions here instead of a second full-sequence pass.
+    """
+    k = cfg.ssm_conv - 1
+    d_in = cfg.d_inner
+    g, n = cfg.ssm_ngroups, cfg.ssm_state
+    hp = jnp.pad(h, ((0, 0), (k, 0), (0, 0)))
+    # padded index j holds original position j - k; we want originals
+    # [true_len - k, true_len), i.e. padded [true_len, true_len + k)
+    idx = true_lens[:, None].astype(jnp.int32) + jnp.arange(k, dtype=jnp.int32)
+    hw = jnp.take_along_axis(hp, idx[..., None], axis=1)       # [B, K-1, D]
+    xbc = linear(params["in_proj"], hw)[..., d_in:d_in + d_in + 2 * g * n]
+    # positions before the row's start mirror the zero-init conv cache
+    return jnp.where((idx >= k)[..., None], xbc, jnp.zeros_like(xbc))
 
 
 def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> dict:

@@ -18,9 +18,13 @@ Two admission modes:
   attention, page free on completion.  This is the serving lever the
   on-device LLM literature (continuous batching / paged KV à la KVNAND)
   identifies on top of the paper's single-batch NPU+flash scenario.
+  Covers dense/vlm/moe (full K/V pages), mla_moe (compressed ckv+krope
+  pages), and hybrid (shared-attn KV pages + a slot-indexed Mamba state
+  pool whose lanes are masked by ``active`` and checkpointed/restored
+  across preempt-resume).
 * ``wave`` — the legacy shared-cursor cache: one length cursor for the whole
-  batch, so new requests only start when the batch drains.  Kept for
-  recurrent-state families and as the benchmark baseline.
+  batch, so new requests only start when the batch drains.  Kept for the
+  pure-SSM and encoder-decoder families and as the benchmark baseline.
 
 Chunked prefill (``scheduler.chunk_tokens``): a prompt longer than the
 policy's per-step budget is admitted into a slot and prefilled in
@@ -315,7 +319,10 @@ class ServingEngine:
                 cfg, max_batch, max_seq, page_size=page_size,
                 num_pages=self.num_pages)
             self.kv_page_bytes = model_lib.kv_page_bytes(
-                cfg, page_size, self.cache["k"].dtype)
+                cfg, page_size, model_lib.paged_pool_dtype(self.cache))
+            # hybrid: per-slot Mamba state checkpoints, filled on suspend
+            self._has_state = model_lib.has_slot_state(cfg)
+            self._ssm_ckpt: dict[int, object] = {}
             # hot-loop bookkeeping lives host-side in numpy (block table,
             # last tokens, active mask): mutating them costs nothing and they
             # ride into each jitted call as inputs, so the only per-step
@@ -551,11 +558,17 @@ class ServingEngine:
 
     def _suspend(self, i: int) -> None:
         """Preempt slot ``i``: it stops decoding and its pages become LRU
-        eviction candidates, oldest (lowest page index) first, tail last."""
+        eviction candidates, oldest (lowest page index) first, tail last.
+        A hybrid slot's Mamba state is checkpointed host-side so resume can
+        restore it bit-identically (the state pool never pages — it is tiny
+        and per-slot — but the checkpoint pins the resume contract even if
+        something scribbles the lane while suspended)."""
         self.suspended[i] = True
         self.resume_order.append(i)
         self.stats.preemptions += 1
         self.slots[i].n_preempted += 1
+        if self._has_state:
+            self._ssm_ckpt[i] = model_lib.checkpoint_slot_state(self.cache, i)
         for page_idx, pid in enumerate(self.slot_pages[i]):
             if pid != 0:
                 self.allocator.mark_evictable((i, page_idx), pid)
@@ -571,6 +584,9 @@ class ServingEngine:
             self.resume_order.pop(0)
             self.suspended[i] = False
             self.allocator.unmark_slot(lambda k, i=i: k[0] == i)
+            if self._has_state and i in self._ssm_ckpt:
+                self.cache = model_lib.restore_slot_state(
+                    self.cache, i, self._ssm_ckpt.pop(i))
             self._resumed_now.add(i)
             self.stats.resumes += 1
 
@@ -620,6 +636,7 @@ class ServingEngine:
         self.prefilling[i] = False
         self.prefill_pos[i] = 0
         self.block[i] = 0
+        self._ssm_ckpt.pop(i, None)
         self.cache["lens"] = self.cache["lens"].at[i].set(0)
 
     def _finish(self, i: int, req: Request, reason: str,

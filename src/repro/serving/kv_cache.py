@@ -183,6 +183,30 @@ def pages_needed(n_tokens: int, page_size: int) -> int:
     return -(-n_tokens // page_size)
 
 
+def kv_page_elems(cfg, page_size: int) -> int:
+    """Elements one KV page holds across ALL its layer-stacked pools — the
+    single source of truth for per-family page-byte accounting (the engine's
+    ``kv_page_bytes`` and the simulator's tier pricing both derive from it).
+
+    * dense/vlm/moe: K + V rows, every layer — 2 * L * page * Hkv * Dh.
+    * mla_moe: the page carries COMPRESSED [page, d_ckv + d_krope] rows
+      (ckv + krope pools), every layer — spilled bytes shrink with the
+      cache, which is what makes flash-resident KV cheapest per token here.
+    * hybrid: only the shared-attention applications carry KV — 2 *
+      (L // shared_attn_every) * page * Hkv * Dh; the Mamba state never
+      pages (it lives in the slot-indexed state pool).
+    """
+    f = cfg.family
+    if f == "mla_moe":
+        return cfg.n_layers * page_size * (cfg.kv_lora_rank + cfg.qk_rope_dim)
+    if f == "hybrid":
+        n_groups = cfg.n_layers // cfg.shared_attn_every
+        return 2 * n_groups * page_size * cfg.n_kv_heads * cfg.d_head
+    if f in ("dense", "vlm", "moe"):
+        return 2 * cfg.n_layers * page_size * cfg.n_kv_heads * cfg.d_head
+    raise ValueError(f"family {f!r} has no paged KV cache")
+
+
 def chunk_spans(n_tokens: int, budget: int) -> list[tuple[int, int]]:
     """Reference chunked-prefill schedule for a FIXED budget: ``(start,
     length)`` spans of at most ``budget`` tokens tiling the prompt.  The

@@ -151,10 +151,28 @@ def kv_swap_overhead_s(cfg: ModelConfig, flash: FlashSpec,
     return kv.total - base.total
 
 
+def family_kv_page_bytes(cfg: ModelConfig, page_size: int,
+                         bytes_per_elem: float = 2.0) -> float:
+    """Bytes one evicted KV page moves, per family — the MLA family spills
+    compressed [page, d_ckv + d_krope] rows and the hybrid family only its
+    shared-attention groups, so their tier traffic is a fraction of a
+    same-sized dense model's.  Derives from the same element count the
+    engine's ``kv_page_bytes`` uses (``serving.kv_cache.kv_page_elems``),
+    keeping the sim pricing honest with the live byte counters."""
+    from repro.serving.kv_cache import kv_page_elems
+    return kv_page_elems(cfg, page_size) * bytes_per_elem
+
+
 def kv_page_cost_s(cfg: ModelConfig, flash: FlashSpec,
-                   kv_page_bytes: float, **kw) -> float:
+                   kv_page_bytes: float | None = None,
+                   page_size: int = 16, **kw) -> float:
     """Token-latency cost of ONE evicted KV page (spilled now, prefetched
-    back later) — what the serving engine charges an eviction decision."""
+    back later) — what the serving engine charges an eviction decision.
+    ``kv_page_bytes`` defaults to the family-accurate page size
+    (``family_kv_page_bytes``), so MLA's compressed pages price cheaper
+    than a dense model's full-K/V pages."""
+    if kv_page_bytes is None:
+        kv_page_bytes = family_kv_page_bytes(cfg, page_size)
     return kv_swap_overhead_s(cfg, flash, kv_page_bytes, kv_page_bytes, **kw)
 
 

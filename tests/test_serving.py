@@ -5,6 +5,13 @@ The load-bearing check is the greedy oracle: a request admitted mid-stream
 the tokens it produces when served alone.  That only holds if the paged
 cache gives every slot position-independent storage (block table), per-slot
 positions (length vector), and leak-free page recycling.
+
+The serving contract is pinned as a CROSS-FAMILY conformance suite: every
+test parametrized over ``fam`` runs for every family where
+``supports_paged`` is true (dense, moe, vlm, mla_moe, hybrid — ids
+``fam_<family>``, so ``pytest -k fam_hybrid`` / ``make test-families``
+selects one family).  A new family cannot claim paged serving without
+passing the whole suite.
 """
 
 import jax
@@ -19,6 +26,10 @@ from repro.serving.kv_cache import (OutOfPages, PageAllocator, pages_needed,
                                     prefill_bucket)
 
 KEY = jax.random.PRNGKey(0)
+
+# the cross-family ``fam`` fixture lives in the repo-root conftest.py so the
+# conformance suite here and in test_tiered_kv.py share one session-scoped
+# params copy per family
 
 
 @pytest.fixture(scope="module")
@@ -141,42 +152,78 @@ def test_paged_cache_shapes(smollm):
         M.init_paged_cache(ASSIGNED_ARCHS["mamba2-130m"].reduced(), 2, 32)
 
 
-def test_decode_step_paged_matches_legacy(smollm):
-    """Single request through paged prefill+decode == legacy shared-cursor
-    path, bit-for-bit greedy, regardless of which slot and pages it lands
-    on."""
-    cfg, _ = smollm
+def test_paged_cache_shapes_new_families():
+    """mla_moe pages compressed [page, R]+[page, Dr] rows; hybrid pages only
+    the shared-attn groups and carries a slot-indexed Mamba state pool."""
+    cfg = ASSIGNED_ARCHS["deepseek-v2-lite-16b"].reduced()
+    cache = M.init_paged_cache(cfg, 3, 40, page_size=16)
+    assert cache["ckv"].shape == (cfg.n_layers, 10, 16, cfg.kv_lora_rank)
+    assert cache["krope"].shape == (cfg.n_layers, 10, 16, cfg.qk_rope_dim)
+    assert "k" not in cache and M.paged_slot_capacity(cache) == 48
+    assert M.has_slot_state(cfg) is False
+
+    hcfg = ASSIGNED_ARCHS["zamba2-7b"].reduced()
+    hcache = M.init_paged_cache(hcfg, 3, 40, page_size=16)
+    n_groups = hcfg.n_layers // hcfg.shared_attn_every
+    tail = hcfg.n_layers - n_groups * hcfg.shared_attn_every
+    assert hcache["k"].shape == (n_groups, 10, 16, hcfg.n_kv_heads,
+                                 hcfg.d_head)
+    assert hcache["mamba"]["state"].shape[:3] == (
+        n_groups, hcfg.shared_attn_every, 3)   # slot-indexed state pool
+    if tail:
+        assert hcache["tail"]["state"].shape[:2] == (tail, 3)
+    assert M.has_slot_state(hcfg) is True
+
+
+def test_decode_step_paged_matches_legacy(fam):
+    """Conformance (every paged family): a single request through paged
+    prefill+decode == the legacy shared-cursor reference path — per-step
+    logits within float32 tolerance and greedy tokens EXACTLY equal —
+    regardless of which slot and pages it lands on.  This is the check
+    against the wave/full-forward reference (the engine-level oracles only
+    compare continuous-mode runs with each other)."""
+    family, cfg, _ = fam
     params = M.init_params(cfg, KEY, dtype=jnp.float32, max_seq=64)
     toks = jax.random.randint(KEY, (1, 7), 0, cfg.vocab_size)
+    extras = {}
+    if family == "vlm":
+        extras = {"vision_embeds": jax.random.normal(
+            KEY, (1, cfg.n_vision_tokens, cfg.d_model), jnp.float32)}
+    len0 = 7 + (cfg.n_vision_tokens if family == "vlm" else 0)
 
     cache = M.init_cache(cfg, 1, 32, dtype=jnp.float32)
-    last, cache = M.prefill(params, cfg, toks, cache, {})
+    last, cache = M.prefill(params, cfg, toks, cache, extras)
     legacy = [int(jnp.argmax(last, -1)[0])]
+    legacy_logits = [np.asarray(last[0])]
     tok = jnp.argmax(last, -1).astype(jnp.int32)
     for _ in range(5):
         lg, cache = M.decode_step(params, cfg, tok, cache)
         tok = jnp.argmax(lg, -1).astype(jnp.int32)
         legacy.append(int(tok[0]))
+        legacy_logits.append(np.asarray(lg[0]))
 
     pc = M.init_paged_cache(cfg, 3, 32, dtype=jnp.float32, page_size=8)
     pps = pc["block"].shape[1]
     pc["block"] = pc["block"].at[1, :].set(
         jnp.arange(1, pps + 1, dtype=jnp.int32))
     padded = jnp.pad(toks, ((0, 0), (0, 9)))  # right-pad to a bucket
-    lg1, pc = M.prefill_into_slot(params, cfg, padded, jnp.int32(7), pc,
-                                  jnp.int32(1), {})
-    np.testing.assert_allclose(np.asarray(lg1), np.asarray(last[0]),
+    lg1, pc = M.prefill_into_slot(params, cfg, padded, jnp.int32(len0), pc,
+                                  jnp.int32(1), extras)
+    np.testing.assert_allclose(np.asarray(lg1), legacy_logits[0],
                                rtol=1e-5, atol=1e-5)
     paged = [int(jnp.argmax(lg1))]
     tokb = jnp.zeros((3,), jnp.int32).at[1].set(paged[0])
     active = jnp.array([False, True, False])
-    for _ in range(5):
+    for step in range(5):
         lg, pc = M.decode_step_paged(params, cfg, tokb, pc, active)
+        np.testing.assert_allclose(np.asarray(lg[1]),
+                                   legacy_logits[step + 1],
+                                   rtol=1e-5, atol=1e-5)
         t = int(jnp.argmax(lg[1]))
         paged.append(t)
         tokb = tokb.at[1].set(t)
     assert paged == legacy
-    assert int(pc["lens"][1]) == 12
+    assert int(pc["lens"][1]) == len0 + 5
     assert int(pc["lens"][0]) == 0 and int(pc["lens"][2]) == 0
 
 
@@ -251,10 +298,11 @@ def test_engine_mixed_length_prompts(smollm):
     assert eng.stats.admitted == 5 and eng.stats.completed == 5
 
 
-def test_mid_stream_admission_matches_solo_decode(smollm):
-    """Acceptance check: a request admitted mid-stream (other slots busy
-    decoding) produces greedy output identical to running it alone."""
-    cfg, params = smollm
+def test_mid_stream_admission_matches_solo_decode(fam):
+    """Conformance (every paged family): a request admitted mid-stream
+    (other slots busy decoding) produces greedy output identical to running
+    it alone."""
+    family, cfg, params = fam
     target_prompt = [11, 12, 13, 14]
 
     solo = Request(rid=0, prompt=list(target_prompt), max_new_tokens=7)
@@ -267,6 +315,7 @@ def test_mid_stream_admission_matches_solo_decode(smollm):
               for i in range(3)]
     target = Request(rid=99, prompt=list(target_prompt), max_new_tokens=7)
     eng = _run(cfg, params, others + [target])
+    assert eng.mode == "continuous"
     assert all(r.done for r in others)
     # the target was admitted in a later prefill pass than the first two
     assert eng.stats.prefills >= 2
@@ -274,8 +323,8 @@ def test_mid_stream_admission_matches_solo_decode(smollm):
     assert target.out_tokens == solo.out_tokens
 
 
-def test_eos_termination(smollm):
-    cfg, params = smollm
+def test_eos_termination(fam):
+    family, cfg, params = fam
     probe = Request(rid=0, prompt=[3, 1, 4], max_new_tokens=8)
     _run(cfg, params, [probe])
     assert len(probe.out_tokens) == 8
@@ -283,13 +332,13 @@ def test_eos_termination(smollm):
 
     r = Request(rid=1, prompt=[3, 1, 4], max_new_tokens=8)
     _run(cfg, params, [r], eos_id=eos)
-    assert r.done
+    assert r.done and r.finish_reason == "eos"
     assert r.out_tokens == probe.out_tokens[:3]
     assert r.out_tokens[-1] == eos
 
 
-def test_max_token_termination_and_page_recycling(smollm):
-    cfg, params = smollm
+def test_max_token_termination_and_page_recycling(fam):
+    family, cfg, params = fam
     eng = ServingEngine(cfg, params, max_batch=2, max_seq=48, eos_id=-1,
                         page_size=8)
     first = [Request(rid=i, prompt=[2 + i], max_new_tokens=3)
@@ -307,9 +356,72 @@ def test_max_token_termination_and_page_recycling(smollm):
     eng.run()
     assert all(r.done for r in second)
     assert all(len(r.out_tokens) == 20 for r in second)
+    assert all(r.finish_reason == "length" for r in second)
     assert eng.allocator.available == pool
     assert np.asarray(eng.cache["lens"]).sum() == 0
     assert eng.block.sum() == 0
+
+
+# ------------------------------------------------- streaming contract
+def _terminal_events(events):
+    return [e for e in events if e.finished]
+
+
+def test_streaming_terminals_unique_under_reject(fam):
+    """``exhaust_policy="reject"`` must still emit exactly ONE terminal
+    RequestOutput per request — rejected ones with finish_reason="rejected"
+    and token=None, completed ones with their real reason."""
+    family, cfg, params = fam
+    reqs = [Request(rid=i, prompt=[2 + i] * (3 + i), max_new_tokens=12)
+            for i in range(5)]
+    eng = ServingEngine(cfg, params, max_batch=3, max_seq=48, eos_id=-1,
+                        page_size=8, num_pages=6, exhaust_policy="reject")
+    for r in reqs:
+        eng.submit(r)
+    events = list(eng.stream())
+    finals = _terminal_events(events)
+    assert sorted(e.rid for e in finals) == [r.rid for r in reqs]
+    assert eng.stats.rejected > 0  # pressure actually rejected someone
+    by_rid = {e.rid: e for e in finals}
+    for r in reqs:
+        e = by_rid[r.rid]
+        if r.rejected:
+            assert e.finish_reason == "rejected" and e.token is None
+        else:
+            assert e.finish_reason in ("eos", "length", "capacity")
+
+
+def test_streaming_terminal_on_capacity(fam):
+    """A request that runs into the sequence capacity wall ends with
+    finish_reason="capacity", exactly once, even mid-stream."""
+    family, cfg, params = fam
+    r = Request(rid=0, prompt=[1, 2, 3], max_new_tokens=10_000)
+    eng = ServingEngine(cfg, params, max_batch=2, max_seq=24, eos_id=-1,
+                        page_size=8)
+    eng.submit(r)
+    events = list(eng.stream())
+    finals = _terminal_events(events)
+    assert len(finals) == 1 and finals[0].rid == 0
+    assert finals[0].finish_reason == "capacity"
+    # token events + the terminal: n_out on the terminal equals the total
+    assert finals[0].n_out == len(r.out_tokens)
+
+
+def test_streaming_terminals_unique_under_requeue_preemption(fam):
+    """Capacity preemption (requeue restarts) must not duplicate or drop
+    terminal events: one per request, after however many restarts."""
+    family, cfg, params = fam
+    reqs = [Request(rid=i, prompt=[2 + i] * (3 + i), max_new_tokens=12)
+            for i in range(5)]
+    eng = ServingEngine(cfg, params, max_batch=3, max_seq=48, eos_id=-1,
+                        page_size=8, num_pages=6, exhaust_policy="requeue")
+    for r in reqs:
+        eng.submit(r)
+    events = list(eng.stream())
+    finals = _terminal_events(events)
+    assert sorted(e.rid for e in finals) == [r.rid for r in reqs]
+    assert eng.stats.pool_exhausted > 0  # restarts actually happened
+    assert all(r.done and not r.rejected for r in reqs)
 
 
 def test_wave_mode_still_serves(smollm):

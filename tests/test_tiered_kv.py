@@ -76,6 +76,88 @@ def test_tiered_allocator_flash_capacity_and_guards():
     assert TieredPageAllocator(6).flash_available is None
 
 
+def test_tiered_allocator_invariants_property():
+    """Residency invariants under random alloc/spill/prefetch/free
+    sequences (hypothesis when available, the vendored fallback otherwise):
+    no page key is simultaneously hot-evictable and cold, residency
+    counters always match the mirrored block table, and ``free`` never
+    accepts a double-free."""
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, strategies as st
+
+    @given(st.integers(4, 24), st.lists(st.integers(0, 24), max_size=60))
+    @settings(max_examples=40, deadline=None)
+    def check(num_pages, ops):
+        a = TieredPageAllocator(num_pages)
+        hot: dict = {}        # key -> pid (the engine's block-table mirror)
+        evictable: set = set()
+        cold: set = set()
+        next_key = 0
+        for op in ops:
+            r = op % 5
+            if r == 0:  # alloc a page for a fresh key
+                if a.available >= 1:
+                    pid = a.alloc(1)[0]
+                    assert pid != 0
+                    assert pid not in hot.values()  # no double hand-out
+                    hot[next_key] = pid
+                    next_key += 1
+                else:
+                    with pytest.raises(OutOfPages):
+                        a.alloc(1)
+            elif r == 1:  # mark one resident page evictable
+                cands = [k for k in hot if k not in evictable]
+                if cands:
+                    k = cands[op % len(cands)]
+                    a.mark_evictable(k, hot[k])
+                    evictable.add(k)
+                    with pytest.raises(ValueError):
+                        a.mark_evictable(k, hot[k])  # already queued
+            elif r == 2:  # spill the LRU candidate (store + free the pid)
+                got = a.pop_evictable(1)
+                assert len(got) <= 1
+                for k, pid in got:
+                    assert k in evictable and hot[k] == pid
+                    a.store(k, ("payload", pid))
+                    a.free([pid])
+                    evictable.discard(k)
+                    del hot[k]
+                    cold.add(k)
+                    with pytest.raises(ValueError):
+                        a.free([pid])  # double-free must raise
+            elif r == 3:  # prefetch one cold page back hot (new pid)
+                if cold and a.available >= 1:
+                    k = sorted(cold)[op % len(cold)]
+                    payload = a.fetch(k)
+                    assert payload[0] == "payload"
+                    pid = a.alloc(1)[0]
+                    cold.discard(k)
+                    hot[k] = pid
+            else:  # free a hot page outright (slot finished)
+                cands = [k for k in hot if k not in evictable]
+                if cands:
+                    k = cands[op % len(cands)]
+                    a.free([hot.pop(k)])
+            # --- invariants, every step ---
+            assert not (evictable & cold)  # never hot-evictable AND cold
+            assert a.cold_count == len(cold)
+            assert a.evictable_count == len(evictable)
+            # hot residency conservation against the block-table mirror
+            assert a.available + len(hot) == num_pages - 1
+        # drain: everything recycles, nothing leaked
+        for k in list(hot):
+            if k in evictable:
+                a.unmark_slot(lambda key, k=k: key == k)
+            a.free([hot.pop(k)])
+        a.drop_slot(lambda key: True)
+        assert a.available == num_pages - 1
+        assert a.cold_count == 0 and a.evictable_count == 0
+
+    check()
+
+
 # ------------------------------------------------------------ model layer
 def test_swap_roundtrip_decode_bit_identical(smollm):
     """Decode logits after spilling a slot's pages and prefetching them back
@@ -134,6 +216,30 @@ def test_kv_page_bytes(smollm):
     assert b == 2 * cfg.n_layers * 8 * cfg.n_kv_heads * cfg.d_head * 4
 
 
+def test_kv_page_bytes_per_family():
+    """Tier pricing must follow the family's actual page row: compressed
+    ckv+krope for MLA (NOT 2*L*Hkv*Dh), shared-attn groups only for hybrid."""
+    from repro.configs.registry import ASSIGNED_ARCHS as A
+    from repro.serving.kv_cache import kv_page_elems
+
+    mla = A["deepseek-v2-lite-16b"].reduced()
+    b = M.kv_page_bytes(mla, 8, jnp.float32)
+    assert b == mla.n_layers * 8 * (mla.kv_lora_rank + mla.qk_rope_dim) * 4
+    # the compressed page is strictly cheaper than a full-K/V page would be
+    assert b < 2 * mla.n_layers * 8 * mla.n_kv_heads * mla.d_head * 4
+
+    hyb = A["zamba2-7b"].reduced()
+    n_groups = hyb.n_layers // hyb.shared_attn_every
+    assert M.kv_page_bytes(hyb, 8, jnp.float32) == \
+        2 * n_groups * 8 * hyb.n_kv_heads * hyb.d_head * 4
+    # kv_page_elems is the single source of truth both derive from
+    for cfg in (mla, hyb):
+        assert M.kv_page_bytes(cfg, 8, jnp.float32) == \
+            kv_page_elems(cfg, 8) * 4
+    with pytest.raises(ValueError):
+        kv_page_elems(A["mamba2-130m"].reduced(), 8)
+
+
 # ------------------------------------------------------------------ engine
 def _mk_reqs(n):
     return [Request(rid=i, prompt=[2 + i] * (3 + i), max_new_tokens=12 + 2 * i)
@@ -149,11 +255,14 @@ def _run(cfg, params, reqs, **kw):
     return eng
 
 
-def test_tiered_engine_outputs_match_all_resident(smollm):
-    """Acceptance: with the hot pool sized below demand, the tiered engine
-    completes every request with out_tokens identical to the unconstrained
-    run, having actually spilled and prefetched pages."""
-    cfg, params = smollm
+def test_tiered_engine_outputs_match_all_resident(fam):
+    """Conformance (every paged family): with the hot pool sized below
+    demand, the tiered engine completes every request with out_tokens
+    identical to the unconstrained run, having actually spilled and
+    prefetched pages — preempt-resume is bit-identical whether the pages
+    carry full K/V, compressed ckv+krope, or shared-attn KV beside a
+    masked+checkpointed Mamba state pool."""
+    family, cfg, params = fam
     base = _mk_reqs(5)
     _run(cfg, params, base)
     tiered = _mk_reqs(5)
@@ -170,6 +279,39 @@ def test_tiered_engine_outputs_match_all_resident(smollm):
     assert eng.allocator.available == 5
     assert eng.allocator.cold_count == 0 and eng.allocator.evictable_count == 0
     assert not any(eng.suspended) and eng.resume_order == []
+    if family == "hybrid":
+        assert eng._ssm_ckpt == {}  # every checkpoint consumed or dropped
+
+
+def test_hybrid_ssm_checkpoint_restores_scribbled_state():
+    """The state-pool seam: a suspended hybrid slot's Mamba state is
+    checkpointed host-side, and restore brings the slot's rows back
+    bit-identical even if the pool was deliberately scribbled meanwhile."""
+    from repro.configs.registry import ASSIGNED_ARCHS as A
+    cfg = A["zamba2-7b"].reduced()
+    cache = M.init_paged_cache(cfg, 2, 32, dtype=jnp.float32, page_size=8)
+    key = jax.random.PRNGKey(3)
+    cache["mamba"] = jax.tree.map(
+        lambda a: jax.random.normal(key, a.shape, a.dtype), cache["mamba"])
+    if cache.get("tail") is not None:
+        cache["tail"] = jax.tree.map(
+            lambda a: jax.random.normal(key, a.shape, a.dtype), cache["tail"])
+    before = jax.tree.map(lambda a: np.asarray(a[:, :, 1]), cache["mamba"])
+    ckpt = M.checkpoint_slot_state(cache, 1)
+    scribbled = {**cache,
+                 "mamba": jax.tree.map(lambda a: a * 0 - 7.0, cache["mamba"])}
+    restored = M.restore_slot_state(scribbled, 1, ckpt)
+    after = jax.tree.map(lambda a: np.asarray(a[:, :, 1]), restored["mamba"])
+    jax.tree.map(np.testing.assert_array_equal, before, after)
+    # the other slot's (scribbled) rows are untouched by the restore
+    other = jax.tree.map(lambda a: np.asarray(a[:, :, 0]), restored["mamba"])
+    jax.tree.map(lambda a: np.testing.assert_array_equal(a, a * 0 - 7.0),
+                 other)
+    # non-recurrent families have no state to checkpoint
+    dcfg = A["smollm-360m"].reduced()
+    dcache = M.init_paged_cache(dcfg, 2, 32, page_size=8)
+    assert M.checkpoint_slot_state(dcache, 0) is None
+    assert M.restore_slot_state(dcache, 0, None) is dcache
 
 
 def test_tiered_engine_bounded_flash_tier(smollm):
