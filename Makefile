@@ -1,7 +1,8 @@
 # Convenience targets; CI runs the same commands (.github/workflows/ci.yml).
 
 .PHONY: test test-fast test-slow test-families bench-serving \
-	bench-serving-smoke bench-serving-policy bench-serving-kvtier-mla
+	bench-serving-smoke bench-serving-policy bench-serving-kvtier-mla \
+	bench-serving-router
 
 # every family where supports_paged() is true — the serving conformance
 # matrix (test ids are fam_<family>, substring-safe: fam_moe != fam_mla_moe)
@@ -21,13 +22,14 @@ test-slow:
 
 # cross-family serving conformance suite, one family at a time (mirrors the
 # CI family-matrix job): mid-stream-admission oracle, eos/max-token
-# termination, page recycling, streaming terminals, preempt-resume
-# bit-identity — per paged family
+# termination, page recycling, streaming terminals, preempt-resume AND
+# cross-replica slot-migration bit-identity — per paged family
 test-families:
 	@set -e; for f in $(FAMILIES); do \
 		echo "=== conformance: $$f ==="; \
 		python -m pytest -x -q tests/test_serving.py \
-			tests/test_tiered_kv.py -k "fam_$$f"; \
+			tests/test_tiered_kv.py tests/test_router.py \
+			-k "fam_$$f"; \
 	done
 
 bench-serving:
@@ -48,3 +50,12 @@ bench-serving-policy:
 bench-serving-kvtier-mla:
 	PYTHONPATH=src python benchmarks/bench_serving.py --smoke \
 		--arch deepseek-v2-lite-16b --trace kvtier
+
+# multi-replica Router trace: Poisson over 2 replicas (least-loaded +
+# skewed-affinity routes, with cross-replica slot migration) vs 1
+# double-size replica — 100% completion required on every variant, outputs
+# bit-identical to the single-replica run, reports migration count + TTFT
+# p99
+bench-serving-router:
+	PYTHONPATH=src python benchmarks/bench_serving.py --smoke \
+		--trace router --replicas 2

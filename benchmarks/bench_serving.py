@@ -18,17 +18,29 @@ Three traces, all Poisson arrivals:
   (``sim.llm_perf.kv_swap_overhead_s``) to show the bubble-bandwidth cost of
   every evicted page.
 * ``policy`` — the scheduler bake-off: mixed prompt lengths (including long
-  prompts that exercise chunked prefill) and mixed priorities race the
-  capacity-constrained tiered pool under each admission policy (fcfs /
-  priority / sjf / drr, ``serving.scheduler``).  Every policy must complete
-  100% of the trace; the report compares per-policy TTFT and latency
-  percentiles, plus per-priority-class TTFT p99 so the priority policy's
-  SLO effect is visible.
+  prompts that exercise chunked prefill), mixed priorities, and per-request
+  SLO deadlines race the capacity-constrained tiered pool under each
+  admission policy (fcfs / priority / sjf / drr / edf,
+  ``serving.scheduler``).  Every policy must complete 100% of the trace;
+  the report compares per-policy TTFT and latency percentiles, the
+  deadline-miss rate (the EDF policy's target metric), plus
+  per-priority-class TTFT p99 so the priority policy's SLO effect is
+  visible.
+* ``router`` — multi-replica serving through the Router/EngineCore split:
+  ``--replicas N`` small replicas under least-loaded routing with
+  cross-replica slot migration vs ONE N-wide replica with the same total
+  slot and page budget.  Both must complete 100%; the report compares
+  wall clock and TTFT p99 and counts slot migrations (each one drains a
+  page-starved replica's victim slot into a peer with headroom,
+  bit-identical — the N-replica fleet should hold the single-replica
+  latency profile despite the partitioned KV pools).
 
 Run:  PYTHONPATH=src python benchmarks/bench_serving.py \
           --arch smollm-360m --requests 12 --rate 4 --max-batch 4
       PYTHONPATH=src python benchmarks/bench_serving.py --smoke
       PYTHONPATH=src python benchmarks/bench_serving.py --trace policy --smoke
+      PYTHONPATH=src python benchmarks/bench_serving.py --trace router \
+          --smoke --replicas 2
 """
 
 from __future__ import annotations
@@ -44,6 +56,7 @@ from repro.configs.registry import get_arch
 from repro.core.hw import CAMBRICON_LLM_S
 from repro.models import model as model_lib
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.router import Router
 from repro.serving.scheduler import POLICIES, make_scheduler
 from repro.sim.llm_perf import kv_swap_overhead_s
 
@@ -70,9 +83,12 @@ def make_requests(n: int, cfg, max_new: int, seed: int) -> list[Request]:
     return reqs
 
 
-def drive(eng: ServingEngine, reqs: list[Request],
-          arrivals: np.ndarray) -> float:
-    """Feed requests at their arrival times; returns wall seconds."""
+def drive(eng, reqs: list[Request], arrivals: np.ndarray) -> float:
+    """Feed requests at their arrival times; returns wall seconds.
+
+    ``eng`` is anything with the ``submit(req) / step() / has_work``
+    surface — a ServingEngine or a multi-replica Router.
+    """
     t0 = time.monotonic()
     i = 0
     while True:
@@ -80,8 +96,8 @@ def drive(eng: ServingEngine, reqs: list[Request],
         while i < len(reqs) and arrivals[i] <= now:
             eng.submit(reqs[i])
             i += 1
-        worked = eng.step()
-        if not worked:
+        eng.step()
+        if not eng.has_work:
             if i >= len(reqs):
                 break
             wait = arrivals[i] - (time.monotonic() - t0)
@@ -267,17 +283,23 @@ def _policy_prompt_lens(max_seq: int, max_new: int) -> list[int]:
 def make_policy_requests(n: int, cfg, max_new: int, seed: int,
                          max_seq: int, page_size: int) -> list[Request]:
     """Mixed trace: short interactive prompts AND long prompts (chunked
-    prefill territory), with priorities 0..2 — the workload where admission
-    policy actually changes TTFT."""
+    prefill territory), priorities 0..2, and a per-request SLO deadline
+    (tight for the short interactive requests, loose for the long ones) —
+    the workload where admission policy actually changes TTFT and where
+    the EDF policy has deadlines to order by."""
     rng = np.random.RandomState(seed + 3)
     lens = _policy_prompt_lens(max_seq, max_new)
     reqs = []
     for rid in range(n):
         plen = int(lens[rid % len(lens)])
         n_new = int(rng.randint(max(2, max_new // 4), max_new + 1))
+        # SLO scales with the request's own service demand (so misses
+        # measure scheduling, not model speed), floored for tiny requests
+        deadline = max(1.0, 0.15 * (plen + n_new))
         reqs.append(Request(
             rid=rid, prompt=rng.randint(0, cfg.vocab_size, size=plen).tolist(),
-            max_new_tokens=n_new, priority=int(rng.randint(0, 3))))
+            max_new_tokens=n_new, priority=int(rng.randint(0, 3)),
+            deadline_s=float(deadline)))
     return reqs
 
 
@@ -298,9 +320,13 @@ def bench_policy_variant(policy: str, cfg, params, args, pool: int) -> dict:
     for p in sorted({r.priority for r in reqs}):
         xs = [r.ttft_s for r in reqs if r.priority == p and not r.rejected]
         by_prio[p] = float(np.percentile(xs, 99)) if xs else 0.0
+    with_slo = [r for r in reqs if r.deadline_s is not None
+                and not r.rejected]
+    missed = sum(1 for r in with_slo if r.deadline_missed)
     return {
         "policy": policy, "wall_s": wall,
         "completed_pct": 100.0 * ok / len(reqs),
+        "miss_pct": 100.0 * missed / max(1, len(with_slo)),
         "tokens": s.tokens_out,
         "ttft_p50": s.percentiles("ttft_s")["p50"],
         "ttft_p99": s.percentiles("ttft_s")["p99"],
@@ -336,12 +362,13 @@ def bench_policy(cfg, params, args) -> list[dict]:
 
     rows = [bench_policy_variant(p, cfg, params, args, pool)
             for p in sorted(POLICIES)]
-    hdr = ("policy", "wall_s", "done%", "tokens", "ttft_p50", "ttft_p99",
-           "lat_p50", "lat_p99", "preempt", "chunks")
+    hdr = ("policy", "wall_s", "done%", "miss%", "tokens", "ttft_p50",
+           "ttft_p99", "lat_p50", "lat_p99", "preempt", "chunks")
     print(" ".join(f"{h:>9}" for h in hdr))
     for r in rows:
         print(f"{r['policy']:>9} {r['wall_s']:>9.2f} "
-              f"{r['completed_pct']:>9.1f} {r['tokens']:>9d} "
+              f"{r['completed_pct']:>9.1f} {r['miss_pct']:>9.1f} "
+              f"{r['tokens']:>9d} "
               f"{r['ttft_p50']:>9.3f} {r['ttft_p99']:>9.3f} "
               f"{r['latency_p50']:>9.3f} {r['latency_p99']:>9.3f} "
               f"{r['preemptions']:>9d} {r['prefill_chunks']:>9d}")
@@ -352,6 +379,92 @@ def bench_policy(cfg, params, args) -> list[dict]:
     for r in rows:
         assert r["completed_pct"] == 100.0, \
             f"{r['policy']} dropped requests on the tiered trace"
+    return rows
+
+
+def bench_router_variant(name: str, cfg, params, args, pool: int,
+                         replicas: int, route: str = "least_loaded") -> dict:
+    """One Poisson run over a Router fleet.  ``replicas`` small replicas
+    vs one replica holding the same TOTAL slot+page budget."""
+    if replicas == 1:
+        eng = Router.build(cfg, params, replicas=1,
+                           max_batch=args.max_batch * args.replicas,
+                           max_seq=args.max_seq, eos_id=-1,
+                           mode="continuous", page_size=args.page_size,
+                           num_pages=args.replicas * pool + 1,
+                           kv_tier="flash")
+    else:
+        eng = Router.build(cfg, params, replicas=replicas, policy=route,
+                           max_batch=args.max_batch, max_seq=args.max_seq,
+                           eos_id=-1, mode="continuous",
+                           page_size=args.page_size, num_pages=pool + 1,
+                           kv_tier="flash")
+    reqs = make_kv_requests(args.requests, cfg, args.max_new, args.seed)
+    if route == "session_affinity":
+        # skewed session mix: most requests belong to one hot session, so
+        # affinity piles them onto one replica — the hotspot slot migration
+        # exists to drain (the cold replica is the donor)
+        for r in reqs:
+            r.session = "hot" if r.rid % 4 else f"cold-{r.rid}"
+    arrivals = poisson_arrivals(args.requests, args.rate, args.seed)
+    wall = drive(eng, reqs, arrivals)
+    assert all(r.done for r in reqs)
+    ok = [r for r in reqs if not r.rejected]
+    ttft = [r.ttft_s for r in ok]
+    tokens = sum(s.tokens_out for s in eng.stats)
+    return {
+        "variant": name, "wall_s": wall,
+        "completed_pct": 100.0 * len(ok) / len(reqs),
+        "tokens": tokens, "tok_per_s": tokens / wall,
+        "ttft_p50": float(np.percentile(ttft, 50)) if ttft else 0.0,
+        "ttft_p99": float(np.percentile(ttft, 99)) if ttft else 0.0,
+        "migrations": eng.migrations,
+        "preemptions": sum(s.preemptions for s in eng.stats),
+        "out_tokens": {r.rid: list(r.out_tokens) for r in ok},
+    }
+
+
+def bench_router(cfg, params, args) -> list[dict]:
+    """Multi-replica Router vs one wide replica, same total budget."""
+    from repro.serving.kv_cache import pages_needed
+    per_req = pages_needed(min(args.max_seq, max(PROMPT_LENS) + args.max_new),
+                           args.page_size)
+    pool = args.pool_pages if args.pool_pages > 0 else per_req + 1
+    print(f"\n[router] arch={cfg.name} requests={args.requests} "
+          f"replicas={args.replicas} x (batch={args.max_batch}, "
+          f"pool={pool}) vs 1 x (batch={args.replicas * args.max_batch}, "
+          f"pool={args.replicas * pool})")
+    _warm(cfg, params, args, mode="continuous")
+    n = args.replicas
+    rows = [bench_router_variant("1-wide", cfg, params, args, pool, 1),
+            bench_router_variant(f"{n}-balanced", cfg, params, args, pool,
+                                 n, route="least_loaded"),
+            bench_router_variant(f"{n}-affinity", cfg, params, args, pool,
+                                 n, route="session_affinity")]
+    hdr = ("variant", "wall_s", "done%", "tokens", "tok/s", "ttft_p50",
+           "ttft_p99", "preempt", "migrate")
+    print(" ".join(f"{h:>10}" for h in hdr))
+    for r in rows:
+        print(f"{r['variant']:>10} {r['wall_s']:>10.2f} "
+              f"{r['completed_pct']:>10.1f} {r['tokens']:>10d} "
+              f"{r['tok_per_s']:>10.1f} {r['ttft_p50']:>10.3f} "
+              f"{r['ttft_p99']:>10.3f} {r['preemptions']:>10d} "
+              f"{r['migrations']:>10d}")
+    wide = rows[0]
+    for r in rows:
+        assert r["completed_pct"] == 100.0, \
+            f"{r['variant']} dropped requests on the router trace"
+        # partitioning the pool must not change any output: migration
+        # relocates a slot's pages across replicas exactly like the tier
+        # relocates them across pids — never approximates
+        assert r["out_tokens"] == wide["out_tokens"], \
+            f"{r['variant']} outputs diverge from the single-replica run"
+    fleet, skew = rows[1], rows[2]
+    print(f"\n{n}-replica fleet: 100% completed on both routes; "
+          f"TTFT p99 {wide['ttft_p99']:.3f}s (1-wide) -> "
+          f"{fleet['ttft_p99']:.3f}s (balanced) / {skew['ttft_p99']:.3f}s "
+          f"(skewed affinity, {skew['migrations']} hotspot slot "
+          f"migration(s) drained)")
     return rows
 
 
@@ -369,8 +482,12 @@ def main(argv=None):
     ap.add_argument("--pool-pages", type=int, default=0,
                     help="hot KV pool size for the kvtier trace "
                          "(0 = auto, sized below trace demand)")
+    ap.add_argument("--replicas", type=int, default=2,
+                    help="replica count for the router trace (raced "
+                         "against ONE replica with the same total "
+                         "slot+page budget)")
     ap.add_argument("--trace", choices=("admission", "kvtier", "policy",
-                                        "all"),
+                                        "router", "all"),
                     default="all")
     ap.add_argument("--chunk-prefill", type=int, default=8,
                     help="chunked-prefill token budget for the policy "
@@ -399,6 +516,8 @@ def main(argv=None):
         out["kvtier"] = bench_kvtier(cfg, params, args)
     if args.trace in ("policy", "all"):
         out["policy"] = bench_policy(cfg, params, args)
+    if args.trace in ("router", "all"):
+        out["router"] = bench_router(cfg, params, args)
     return out
 
 

@@ -1,12 +1,14 @@
-"""End-to-end serving driver: batched requests, W8A8 weights, continuous
-batching over the paged per-slot KV cache, straggler watchdog — the paper's
-deployment scenario as a server, on the attention/SSM-hybrid family it is
-named for: zamba2's shared-attention KV is paged like any dense cache while
-the per-slot Mamba state lives in the slot-indexed state pool.
+"""End-to-end serving demo on the attention/SSM-hybrid family, through the
+three-layer serving API: a ServingClient hands requests to a Router, which
+spreads them over two EngineCore replicas (least-loaded) and migrates slots
+between them when one runs out of KV pages — zamba2's shared-attention KV is
+paged like any dense cache while the per-slot Mamba state lives in the
+slot-indexed state pool, and BOTH travel inside a migration snapshot.
 
-With 6 requests and only 2 slots, the paged cache admits each queued request
-the moment a slot frees (single-slot prefill while the other slot keeps
-decoding) instead of waiting for the whole batch to drain.
+Each replica runs the paper's deployment scenario (W8A8 weights, continuous
+batching over the paged per-slot KV cache, straggler watchdog); with 6
+requests and only 2 slots per replica, queued requests admit the moment a
+slot frees anywhere in the fleet.
 
 Run:  PYTHONPATH=src python examples/serve_hybrid.py
 """
@@ -18,7 +20,7 @@ import jax
 from repro.configs.registry import get_arch
 from repro.models import model as model_lib
 from repro.quant.convert import quantize_params
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.client import ServingClient
 
 cfg = get_arch("zamba2-7b").reduced()  # hybrid: paged shared-attn KV + SSM state pool
 params = model_lib.init_params(cfg, jax.random.PRNGKey(0), max_seq=128)
@@ -27,20 +29,23 @@ params = quantize_params(params)  # the paper's W8A8 deployment mode
 slow_steps = {3}  # pretend decode step 3 straggles -> engine re-dispatches
 watchdog = lambda step, dt: step in slow_steps and not slow_steps.discard(step)
 
-eng = ServingEngine(cfg, params, max_batch=2, max_seq=128, eos_id=-1,
-                    watchdog=watchdog, mode="continuous", page_size=16)
+client = ServingClient(cfg, params, replicas=2, route="least_loaded",
+                       max_batch=2, max_seq=128, eos_id=-1,
+                       watchdog=watchdog, mode="continuous", page_size=16)
 prompts = [[1, 2, 3], [7, 8], [11, 12, 13, 14], [21], [31, 32], [41, 42, 43]]
-reqs = [Request(rid=i, prompt=p, max_new_tokens=12 - i)
-        for i, p in enumerate(prompts)]
-for r in reqs:
-    eng.submit(r)
+handles = [client.submit(p, max_new_tokens=12 - i)
+           for i, p in enumerate(prompts)]
 
 t0 = time.time()
-stats = eng.run()
+client.run()
 dt = time.time() - t0
-for r in reqs:
-    print(f"req {r.rid}: prompt={r.prompt} -> {r.out_tokens}")
-print(f"\n{stats.tokens_out} tokens in {dt:.1f}s "
-      f"({stats.tokens_out/dt:.1f} tok/s), single-slot prefills="
-      f"{stats.prefills}, straggler re-dispatches={stats.straggler_events}")
-print(stats.summary())
+for h in handles:
+    r = h.request
+    print(f"req {r.rid}: prompt={r.prompt} -> {r.out_tokens} "
+          f"(reason={h.finish_reason})")
+stats = client.router.stats
+tokens = sum(s.tokens_out for s in stats)
+print(f"\n{tokens} tokens in {dt:.1f}s ({tokens/dt:.1f} tok/s), "
+      f"single-slot prefills={sum(s.prefills for s in stats)}, "
+      f"straggler re-dispatches={sum(s.straggler_events for s in stats)}")
+print(client.summary())

@@ -1,13 +1,28 @@
-"""Serving driver over the public Request / RequestOutput contract.
+"""Serving driver over the ServingClient surface.
 
-Builds an engine with a pluggable scheduling policy, submits a mixed batch
-of prioritized requests with per-request sampling, and consumes the
-streaming ``RequestOutput`` events as they happen — the same surface a
-network frontend would sit on.
+This is the user-facing end of the three-layer serving API
+(``ServingClient -> Router -> EngineCore``, see serving/engine.py and the
+ROADMAP design note): the client allocates globally unique request ids —
+and derives each stochastic request's sampling seed from its id, so seeds
+never collide across replicas — the router spreads requests over
+``--replicas N`` engine replicas under ``--route`` (round_robin /
+least_loaded / session_affinity) and migrates slots off page-starved
+replicas, and each replica runs the paged/tiered KV serving loop under the
+``--policy`` scheduler (fcfs / priority / sjf / drr / edf).
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
-      --requests 8 --max-new 16 --policy priority --chunk-prefill 8 \
+      --requests 8 --max-new 16 --replicas 2 --route least_loaded \
+      --policy edf --deadline 5.0 --chunk-prefill 8 \
       --temperature 0.8 --top-k 40 --stream
+
+Typical surface usage (what this driver does):
+
+    client = ServingClient(cfg, params, replicas=2, route="least_loaded",
+                           max_batch=4, max_seq=128, scheduler="edf")
+    h = client.submit(prompt, max_new_tokens=16, deadline_s=5.0,
+                      sampling=SamplingParams(temperature=0.8))
+    for out in client.stream():   # or: for tok in h.tokens()
+        ...
 """
 
 from __future__ import annotations
@@ -20,7 +35,8 @@ import jax
 from repro.configs.registry import get_arch
 from repro.models import model as model_lib
 from repro.quant.convert import quantize_params
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.client import ServingClient
+from repro.serving.router import ROUTE_POLICIES
 from repro.serving.scheduler import POLICIES, SamplingParams, make_scheduler
 
 
@@ -30,8 +46,17 @@ def main():
     ap.add_argument("--reduced", type=int, default=1)
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="slots PER replica")
     ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="engine replicas behind the router")
+    ap.add_argument("--route", default="round_robin",
+                    choices=ROUTE_POLICIES,
+                    help="router policy distributing requests over "
+                         "replicas")
+    ap.add_argument("--no-migrate", action="store_true",
+                    help="disable cross-replica slot migration")
     ap.add_argument("--mode", default="auto",
                     choices=["auto", "wave", "continuous"],
                     help="auto = continuous where the family supports a "
@@ -39,8 +64,11 @@ def main():
     ap.add_argument("--page-size", type=int, default=16,
                     help="tokens per KV page (continuous mode)")
     ap.add_argument("--policy", default="fcfs", choices=sorted(POLICIES),
-                    help="admission/preemption policy "
+                    help="per-replica admission/preemption policy "
                          "(serving.scheduler)")
+    ap.add_argument("--deadline", type=float, default=0.0,
+                    help="per-request SLO budget in seconds "
+                         "(0 = none; pair with --policy edf)")
     ap.add_argument("--chunk-prefill", type=int, default=0,
                     help="chunked-prefill token budget per step "
                          "(0 = one-shot prefill)")
@@ -49,7 +77,9 @@ def main():
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0,
-                    help="sampling seed base (request seed = base + rid)")
+                    help="sampling seed base; the CLIENT derives each "
+                         "request's seed as base + global rid, so streams "
+                         "never collide across replicas")
     ap.add_argument("--stream", action="store_true",
                     help="print each RequestOutput token event")
     ap.add_argument("--quant", default="int8", choices=["none", "int8"])
@@ -62,25 +92,28 @@ def main():
                                    max_seq=args.max_seq)
     if args.quant == "int8":
         params = quantize_params(params)  # the paper's W8A8 deployment mode
-    scheduler = make_scheduler(
-        args.policy, chunk_tokens=args.chunk_prefill or None)
-    eng = ServingEngine(cfg, params, max_batch=args.max_batch,
-                        max_seq=args.max_seq, eos_id=-1, mode=args.mode,
-                        page_size=args.page_size, scheduler=scheduler)
+    client = ServingClient(
+        cfg, params, replicas=args.replicas, route=args.route,
+        migrate=not args.no_migrate, seed_base=args.seed,
+        max_batch=args.max_batch, max_seq=args.max_seq, eos_id=-1,
+        mode=args.mode, page_size=args.page_size,
+        scheduler=make_scheduler(args.policy,
+                                 chunk_tokens=args.chunk_prefill or None))
     rng = jax.random.PRNGKey(42)
-    for rid in range(args.requests):
+    for i in range(args.requests):
         rng, k = jax.random.split(rng)
         plen = int(jax.random.randint(k, (), 2, 9))
         prompt = [int(t) for t in jax.random.randint(
             k, (plen,), 0, cfg.vocab_size)]
-        eng.submit(Request(
-            rid=rid, prompt=prompt, max_new_tokens=args.max_new,
-            priority=rid % 3,  # mixed priorities exercise the policy
+        client.submit(
+            prompt, max_new_tokens=args.max_new,
+            priority=i % 3,  # mixed priorities exercise the policy
+            deadline_s=args.deadline or None,
+            session=f"user-{i % 4}",  # affinity demo under --route
             sampling=SamplingParams(temperature=args.temperature,
-                                    top_k=args.top_k, top_p=args.top_p,
-                                    seed=args.seed + rid)))
+                                    top_k=args.top_k, top_p=args.top_p))
     t0 = time.time()
-    for out in eng.stream():
+    for out in client.stream():
         if out.finished:
             print(f"rid={out.rid} done n_out={out.n_out} "
                   f"reason={out.finish_reason} "
@@ -90,11 +123,11 @@ def main():
         elif args.stream:
             print(f"rid={out.rid} tok[{out.n_out - 1}]={out.token}")
     dt = time.time() - t0
-    stats = eng.stats
-    print(f"requests={args.requests} tokens_out={stats.tokens_out} "
-          f"decode_steps={stats.decode_steps} wall={dt:.1f}s "
-          f"tok/s={stats.tokens_out/dt:.1f}")
-    print(stats.summary())
+    tokens = sum(s.tokens_out for s in client.router.stats)
+    steps = sum(s.decode_steps for s in client.router.stats)
+    print(f"requests={args.requests} tokens_out={tokens} "
+          f"decode_steps={steps} wall={dt:.1f}s tok/s={tokens/dt:.1f}")
+    print(client.summary())
 
 
 if __name__ == "__main__":

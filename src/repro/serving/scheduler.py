@@ -44,6 +44,11 @@ setting:
   per serviced round and admits its FCFS head while the deficit covers the
   head's estimated cost, so no class is starved and bandwidth splits
   proportionally — the classic fair-queueing answer to SJF's starvation.
+* :class:`EDFScheduler` — earliest deadline first over ``Request.deadline_s``
+  (the SLO budget from arrival): admission by absolute deadline, and the
+  pool-pressure ``victim()`` suspends the SLACKEST slot, so urgent requests
+  keep both their slot and their pages.  ``bench_serving --trace policy``
+  reports each policy's deadline-miss rate.
 
 Policies are host-side control flow only — they never touch device state,
 so swapping one in changes *which* jitted calls run, never their traces.
@@ -84,6 +89,9 @@ class SlotView:
     remaining: int      # max_new_tokens - n_out
     prefilling: bool    # still mid chunked-prefill
     suspended: bool     # pages (partially) spilled to the flash tier
+    # ABSOLUTE deadline (arrival_s + Request.deadline_s, same clock as
+    # arrival_s); None = no SLO — EDF treats it as infinitely slack
+    deadline_s: float | None = None
 
 
 @dataclasses.dataclass
@@ -274,8 +282,44 @@ class DRRScheduler(Scheduler):
         return AdmitPlan(order=order)
 
 
+_NO_DEADLINE = float("inf")
+
+
+def _abs_deadline(req) -> float:
+    """Absolute deadline on the arrival clock (inf = no SLO)."""
+    if req.deadline_s is None:
+        return _NO_DEADLINE
+    return (req.arrival_s or 0.0) + req.deadline_s
+
+
+class EDFScheduler(Scheduler):
+    """Earliest deadline first — the SLO policy (``Request.deadline_s`` is
+    the latency budget in seconds from arrival).
+
+    Admission orders by absolute deadline (``arrival_s + deadline_s``;
+    requests without one sort last, FCFS among themselves), the classic
+    optimal single-resource deadline schedule.  The ``victim()`` seam is
+    deadline-aware in the opposite direction: under pool pressure the
+    SLACKEST slot (latest absolute deadline; no-deadline slots first,
+    longest sequence as tie-break) gives up its pages, so an urgent
+    request is never the one suspended to make room.
+    """
+
+    name = "edf"
+
+    def admit(self, queue, slots, free_pages):
+        return AdmitPlan(order=sorted(
+            queue, key=lambda r: (_abs_deadline(r), r.arrival_s, r.rid)))
+
+    def victim(self, slots):
+        return max(slots, key=lambda s: (
+            s.deadline_s if s.deadline_s is not None else _NO_DEADLINE,
+            s.seq_len)).index
+
+
 POLICIES = {c.name: c for c in
-            (FCFSScheduler, PriorityScheduler, SJFScheduler, DRRScheduler)}
+            (FCFSScheduler, PriorityScheduler, SJFScheduler, DRRScheduler,
+             EDFScheduler)}
 
 
 def make_scheduler(policy, **kw) -> Scheduler:

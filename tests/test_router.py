@@ -1,0 +1,459 @@
+"""Router / EngineCore / ServingClient: the multi-replica serving split.
+
+Load-bearing checks, per the serving redesign contract:
+
+* A Router with ONE replica reproduces the legacy ServingEngine outputs
+  token-for-token (the compatibility shim really is a shim).
+* Slot migration is bit-identical for EVERY paged family: a request
+  snapshotted mid-decode on one replica and injected into another emits
+  exactly the token stream of the unmigrated run — KV pages, per-slot
+  length, sampler cursor, and recurrent SSM state all travel in the
+  SlotSnapshot wire format.
+* Terminal RequestOutput events stay globally unique across replicas
+  (exactly one finished event per rid, fleet-wide).
+* Routing policies follow their oracles (least-loaded picks the lighter
+  replica, session affinity is sticky, round robin cycles), and the
+  client is the single place global rids / sampling seeds come from.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.registry import ASSIGNED_ARCHS
+from repro.models import model as M
+from repro.serving.client import ServingClient
+from repro.serving.core import EngineCore, Request, SlotSnapshot
+from repro.serving.engine import ServingEngine
+from repro.serving.router import Router
+from repro.serving.scheduler import SamplingParams
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def smollm():
+    cfg = ASSIGNED_ARCHS["smollm-360m"].reduced()
+    params = M.init_params(cfg, KEY, max_seq=64)
+    return cfg, params
+
+
+def _reqs(n, max_new=5):
+    return [Request(rid=i, prompt=[1 + i] * (2 + i), max_new_tokens=max_new)
+            for i in range(n)]
+
+
+ENG_KW = dict(max_batch=2, max_seq=48, eos_id=-1, page_size=8)
+
+
+# ------------------------------------------------------------- shim parity
+def test_single_replica_router_matches_serving_engine(smollm):
+    """Acceptance: Router(1 replica) == ServingEngine, token-for-token,
+    with identical terminal-event streams."""
+    cfg, params = smollm
+    legacy = _reqs(4)
+    eng = ServingEngine(cfg, params, **ENG_KW)
+    for r in legacy:
+        eng.submit(r)
+    legacy_events = list(eng.stream())
+
+    routed = _reqs(4)
+    rt = Router.build(cfg, params, replicas=1, **ENG_KW)
+    for r in routed:
+        rt.submit(r)
+    routed_events = []
+    while rt.has_work:
+        routed_events.extend(rt.step())
+
+    for a, b in zip(legacy, routed):
+        assert a.out_tokens == b.out_tokens
+        assert a.finish_reason == b.finish_reason
+    assert ([(e.rid, e.token, e.finished) for e in legacy_events]
+            == [(e.rid, e.token, e.finished) for e in routed_events])
+
+
+def test_engine_core_step_returns_events(smollm):
+    """EngineCore.step() is the router-facing command: it returns the
+    events of that round (the shim's bool step + drain stays equivalent)."""
+    cfg, params = smollm
+    core = EngineCore(cfg, params, **ENG_KW)
+    core.add_request(Request(rid=0, prompt=[1, 2], max_new_tokens=3))
+    seen = []
+    while core.has_work:
+        seen.extend(core.step())
+    assert sum(1 for e in seen if e.token is not None) == 3
+    assert sum(1 for e in seen if e.finished) == 1
+    assert seen[-1].finished and seen[-1].n_out == 3
+
+
+# ---------------------------------------------------------------- routing
+def test_least_loaded_routing_oracle(smollm):
+    """Before any stepping, load = queue depth: submissions alternate
+    replicas; a pre-loaded replica is avoided until loads equalize."""
+    cfg, params = smollm
+    rt = Router.build(cfg, params, replicas=2, policy="least_loaded",
+                      **ENG_KW)
+    homes = [rt.cores.index(rt.submit(r)) for r in _reqs(4)]
+    assert homes == [0, 1, 0, 1]
+    # replica 0 now also holds the heavier queue: next goes to 1
+    rt.cores[0].add_request(Request(rid=90, prompt=[7], max_new_tokens=2))
+    assert rt.submit(Request(rid=5, prompt=[9], max_new_tokens=2)) \
+        is rt.cores[1]
+
+
+def test_round_robin_and_affinity_routing(smollm):
+    cfg, params = smollm
+    rt = Router.build(cfg, params, replicas=3, policy="round_robin",
+                      **ENG_KW)
+    homes = [rt.cores.index(rt.submit(r)) for r in _reqs(6, max_new=2)]
+    assert homes == [0, 1, 2, 0, 1, 2]
+
+    af = Router.build(cfg, params, replicas=3, policy="session_affinity",
+                      **ENG_KW)
+    a = [af.cores.index(af.submit(Request(
+        rid=i, prompt=[1], max_new_tokens=2, session="alice")))
+        for i in range(3)]
+    b = [af.cores.index(af.submit(Request(
+        rid=10 + i, prompt=[1], max_new_tokens=2, session="bob")))
+        for i in range(3)]
+    assert len(set(a)) == 1 and len(set(b)) == 1  # sticky per session
+
+
+def test_router_build_gives_each_replica_its_own_scheduler(smollm):
+    """A stateful policy instance (DRR's deficit ring) must be cloned per
+    replica — interleaved admits from two queues would corrupt shared
+    bookkeeping."""
+    from repro.serving.scheduler import DRRScheduler
+    cfg, params = smollm
+    rt = Router.build(cfg, params, replicas=2,
+                      scheduler=DRRScheduler(quantum=8), **ENG_KW)
+    s0, s1 = (c.scheduler for c in rt.cores)
+    assert s0 is not s1
+    assert s0.quantum == s1.quantum == 8 and s0.name == s1.name == "drr"
+
+
+def test_serving_engine_shim_works_as_replica(smollm):
+    """The legacy shim's bool step() must not break a Router that adopts
+    an existing engine as a replica."""
+    cfg, params = smollm
+    eng = ServingEngine(cfg, params, **ENG_KW)
+    rt = Router([eng])
+    r = Request(rid=0, prompt=[1, 2, 3], max_new_tokens=4)
+    rt.submit(r)
+    events = []
+    while rt.has_work:
+        events.extend(rt.step())
+    assert r.done and len(r.out_tokens) == 4
+    assert sum(1 for e in events if e.finished) == 1
+
+
+def test_router_rejects_duplicate_rid(smollm):
+    cfg, params = smollm
+    rt = Router.build(cfg, params, replicas=2, **ENG_KW)
+    rt.submit(Request(rid=7, prompt=[1], max_new_tokens=2))
+    with pytest.raises(ValueError):
+        rt.submit(Request(rid=7, prompt=[2], max_new_tokens=2))
+
+
+def test_router_rejects_heterogeneous_replicas(smollm):
+    cfg, params = smollm
+    a = EngineCore(cfg, params, **ENG_KW)
+    b = EngineCore(cfg, params, max_batch=2, max_seq=48, eos_id=-1,
+                   page_size=16)  # different page size
+    with pytest.raises(ValueError):
+        Router([a, b])
+    with pytest.raises(ValueError):
+        Router([a], policy="lifo")
+
+
+# ------------------------------------------------- fleet-wide event stream
+def test_terminal_events_globally_unique_across_replicas(smollm):
+    """Exactly one finished=True event per rid across the whole fleet,
+    even with capacity pressure forcing restarts on each replica."""
+    cfg, params = smollm
+    client = ServingClient(cfg, params, replicas=2, route="least_loaded",
+                           max_batch=3, max_seq=48, eos_id=-1, page_size=8,
+                           num_pages=6)
+    for i in range(6):
+        client.submit([2 + i] * (3 + i), max_new_tokens=12)
+    events = list(client.stream())
+    finals = [e for e in events if e.finished]
+    assert sorted(e.rid for e in finals) == list(range(6))
+    assert all(e.finish_reason in ("eos", "length", "capacity")
+               for e in finals)
+    # both replicas actually served traffic
+    assert all(s.completed > 0 for s in client.router.stats)
+
+
+def test_client_handles_and_seed_derivation(smollm):
+    """The client is the single seed authority: stochastic requests get
+    seed_base + global rid (unique fleet-wide); pinned seeds pass through;
+    handle.tokens() streams exactly the request's own tokens."""
+    cfg, params = smollm
+    client = ServingClient(cfg, params, replicas=2, seed_base=100,
+                           **ENG_KW)
+    h0 = client.submit([1, 2], max_new_tokens=4,
+                       sampling=SamplingParams(temperature=0.7))
+    h1 = client.submit([3, 4], max_new_tokens=4,
+                       sampling=SamplingParams(temperature=0.7))
+    h2 = client.submit([5, 6], max_new_tokens=4,
+                       sampling=SamplingParams(temperature=0.7, seed=9))
+    h3 = client.submit([7, 8], max_new_tokens=4)  # greedy: no seed needed
+    assert (h0.request.sampling.seed, h1.request.sampling.seed) == (100, 101)
+    assert h2.request.sampling.seed == 9
+    assert h3.request.sampling.seed is None
+    toks = list(h1.tokens())
+    assert toks == h1.request.out_tokens and len(toks) == 4
+    for h in (h0, h2, h3):
+        assert h.result().done
+
+
+def test_abort_emits_single_terminal(smollm):
+    """Abort of a queued AND of a running request each produce exactly one
+    terminal event with finish_reason='aborted', free their pages, and
+    leave the survivor unaffected."""
+    cfg, params = smollm
+    client = ServingClient(cfg, params, replicas=1, **ENG_KW)
+    survivor = client.submit([1, 2, 3], max_new_tokens=6)
+    running = client.submit([4, 5], max_new_tokens=30)
+    queued = client.submit([6, 7], max_new_tokens=30)  # batch is full
+    client.pump()  # admits survivor + running; `queued` stays queued
+    assert client.abort(queued.rid) and client.abort(running.rid)
+    assert not client.abort(999)
+    events = list(client.stream())
+    finals = {}
+    for e in events:
+        if e.finished:
+            assert e.rid not in finals, "duplicate terminal event"
+            finals[e.rid] = e
+    assert set(finals) == {survivor.rid, running.rid, queued.rid}
+    assert finals[running.rid].finish_reason == "aborted"
+    assert finals[queued.rid].finish_reason == "aborted"
+    assert finals[survivor.rid].finish_reason == "length"
+    assert len(survivor.request.out_tokens) == 6
+    core = client.router.cores[0]
+    assert core.allocator.available == core.num_pages - 1  # pages freed
+    assert core.stats.aborted == 2
+
+
+# ------------------------------------------------------------ migration
+def _mk_cores(cfg, params, n=2, **kw):
+    base = dict(max_batch=2, max_seq=48, eos_id=-1, page_size=8)
+    base.update(kw)
+    return [EngineCore(cfg, params, **base) for _ in range(n)]
+
+
+def test_slot_migration_bit_identity(fam):
+    """Conformance (every paged family): snapshot a request mid-decode on
+    replica A, inject it into replica B — the token stream is EXACTLY the
+    single-replica run's, whether the pages carry full K/V, compressed
+    ckv+krope, or shared-attn KV beside the checkpointed Mamba state."""
+    family, cfg, params = fam
+    prompt = [11, 12, 13, 14]
+
+    solo = Request(rid=0, prompt=list(prompt), max_new_tokens=8)
+    eng = ServingEngine(cfg, params, **ENG_KW)
+    eng.submit(solo)
+    eng.run()
+
+    a, b = _mk_cores(cfg, params)
+    mig = Request(rid=0, prompt=list(prompt), max_new_tokens=8)
+    a.add_request(mig)
+    for _ in range(3):  # prefill + 2 decode steps: genuinely mid-decode
+        a.step()
+    assert 0 < len(mig.out_tokens) < 8
+    snap = a.snapshot_slot(0)
+    assert isinstance(snap, SlotSnapshot) and snap.n_pages > 0
+    assert not a.has_work  # drained, nothing left behind
+    assert a.allocator.available == a.num_pages - 1
+    b.inject_slot(snap)
+    while b.has_work:
+        b.step()
+    assert mig.out_tokens == solo.out_tokens
+    assert mig.finish_reason == solo.finish_reason
+    assert mig.n_migrated == 1
+    assert a.stats.migrated_out == 1 and b.stats.migrated_in == 1
+    # donor's pool fully recycles after completion
+    assert b.allocator.available == b.num_pages - 1
+
+
+def test_migration_roundtrip_and_wire_format(smollm):
+    """A -> B -> A double migration of a STOCHASTIC request still matches
+    (seed-pinned sample streams depend only on (seed, output index), never
+    on which replica draws them); the snapshot is plain host data (numpy
+    pages + python scalars) — the cross-host wire format must never
+    capture device arrays."""
+    cfg, params = smollm
+    sp = SamplingParams(temperature=0.8, top_k=20, seed=7)
+    solo = Request(rid=0, prompt=[5, 6, 7], max_new_tokens=9, sampling=sp)
+    eng = ServingEngine(cfg, params, **ENG_KW)
+    eng.submit(solo)
+    eng.run()
+
+    a, b = _mk_cores(cfg, params)
+    mig = Request(rid=0, prompt=[5, 6, 7], max_new_tokens=9, sampling=sp)
+    a.add_request(mig)
+    a.step()
+    snap = a.snapshot_slot(0)
+    assert all(isinstance(p[0], np.ndarray) and isinstance(p[1], np.ndarray)
+               for p in snap.pages)
+    assert isinstance(snap.slot_len, int) and isinstance(snap.last_token, int)
+    b.inject_slot(snap)
+    for _ in range(3):
+        b.step()
+    back = b.snapshot_slot(0)
+    a.inject_slot(back)
+    while a.has_work:
+        a.step()
+    assert mig.out_tokens == solo.out_tokens
+    assert mig.n_migrated == 2
+
+
+def test_migration_mid_chunked_prefill(smollm):
+    """A slot snapshotted while its prompt is still chunk-prefilling
+    resumes on the donor, finishes the remaining chunks there, and decodes
+    bit-identical (prefilling/prefill_pos travel in the snapshot)."""
+    from repro.serving.scheduler import make_scheduler
+    cfg, params = smollm
+    prompt = list(range(1, 21))  # 20 tokens, budget 4 -> 5 chunks
+
+    solo = Request(rid=0, prompt=list(prompt), max_new_tokens=6)
+    eng = ServingEngine(cfg, params,
+                        scheduler=make_scheduler("fcfs", chunk_tokens=4),
+                        **ENG_KW)
+    eng.submit(solo)
+    eng.run()
+
+    a, b = [EngineCore(cfg, params,
+                       scheduler=make_scheduler("fcfs", chunk_tokens=4),
+                       **ENG_KW) for _ in range(2)]
+    mig = Request(rid=0, prompt=list(prompt), max_new_tokens=6)
+    a.add_request(mig)
+    a.step()  # claim slot + first chunk
+    a.step()  # second chunk
+    assert a.prefilling[0] and 0 < a.prefill_pos[0] < len(prompt)
+    snap = a.snapshot_slot(0)
+    assert snap.prefilling and snap.slot_len == snap.prefill_pos
+    b.inject_slot(snap)
+    while b.has_work:
+        b.step()
+    assert mig.out_tokens == solo.out_tokens
+    assert mig.n_chunks == solo.n_chunks  # no chunk lost or repeated
+
+
+def test_migration_of_suspended_slot(smollm):
+    """A partially spilled (suspended) slot snapshots straight from the
+    cold store — no prefetch needed — and resumes bit-identical."""
+    cfg, params = smollm
+    base = [Request(rid=i, prompt=[2 + i] * (3 + i), max_new_tokens=12)
+            for i in range(3)]
+    eng = ServingEngine(cfg, params, max_batch=3, max_seq=48, eos_id=-1,
+                        page_size=8)
+    for r in base:
+        eng.submit(r)
+    eng.run()
+    ref = {r.rid: list(r.out_tokens) for r in base}
+
+    a = EngineCore(cfg, params, max_batch=3, max_seq=48, eos_id=-1,
+                   page_size=8, num_pages=6, kv_tier="flash")
+    b = EngineCore(cfg, params, max_batch=3, max_seq=48, eos_id=-1,
+                   page_size=8)
+    reqs = [Request(rid=i, prompt=[2 + i] * (3 + i), max_new_tokens=12)
+            for i in range(3)]
+    for r in reqs:
+        a.add_request(r)
+
+    def cold_suspended():
+        """A suspended slot with at least one page ACTUALLY spilled (marks
+        become cold pages lazily, when someone else needs the pids)."""
+        return [i for i in range(a.max_batch)
+                if a.suspended[i] and 0 in a.slot_pages[i]]
+
+    for _ in range(200):
+        if cold_suspended():
+            break
+        a.step()
+    assert cold_suspended(), "pool pressure never spilled a suspended slot"
+    i = cold_suspended()[0]
+    rid = a.slots[i].rid
+    snap = a.snapshot_slot(rid)
+    b.inject_slot(snap)
+    while a.has_work or b.has_work:
+        if a.has_work:
+            a.step()
+        if b.has_work:
+            b.step()
+    for r in reqs:
+        assert r.out_tokens == ref[r.rid], r.rid
+
+
+def test_router_migrates_off_starved_replica(smollm):
+    """End-to-end: all requests piled on one tiered replica (affinity), a
+    second idle replica as donor — the router drains starved slots into it
+    and every output matches the unconstrained single-replica reference."""
+    cfg, params = smollm
+    base = [Request(rid=i, prompt=[2 + i] * (3 + i), max_new_tokens=12)
+            for i in range(4)]
+    eng = ServingEngine(cfg, params, max_batch=3, max_seq=48, eos_id=-1,
+                        page_size=8)
+    for r in base:
+        eng.submit(r)
+    eng.run()
+    ref = {r.rid: list(r.out_tokens) for r in base}
+
+    import zlib
+    starved = EngineCore(cfg, params, max_batch=3, max_seq=48, eos_id=-1,
+                         page_size=8, num_pages=6, kv_tier="flash")
+    donor = EngineCore(cfg, params, max_batch=3, max_seq=48, eos_id=-1,
+                       page_size=8)
+    # place the constrained replica where session "hot" hashes, so every
+    # request deterministically piles onto it
+    cores = [None, None]
+    hot_idx = zlib.crc32(b"hot") % 2
+    cores[hot_idx] = starved
+    cores[1 - hot_idx] = donor
+    rt = Router(cores, policy="session_affinity")
+    reqs = [Request(rid=i, prompt=[2 + i] * (3 + i), max_new_tokens=12,
+                    session="hot") for i in range(4)]
+    for r in reqs:
+        assert rt.submit(r) is starved
+    steps = 0
+    while rt.has_work and steps < 500:
+        rt.step()
+        steps += 1
+    assert all(r.done for r in reqs)
+    assert rt.migrations > 0
+    assert donor.stats.migrated_in == rt.migrations
+    for r in reqs:
+        assert r.out_tokens == ref[r.rid], r.rid
+    # fleet-wide leak check: both pools fully recycled
+    for c in (starved, donor):
+        assert c.allocator.available == c.num_pages - 1
+
+
+def test_inject_guards(smollm):
+    """inject_slot refuses mismatched geometry and full replicas;
+    snapshot_slot refuses unknown rids."""
+    cfg, params = smollm
+    a, b = _mk_cores(cfg, params)
+    wrong = EngineCore(cfg, params, max_batch=2, max_seq=48, eos_id=-1,
+                       page_size=16)
+    r = Request(rid=0, prompt=[1, 2, 3], max_new_tokens=6)
+    a.add_request(r)
+    a.step()
+    with pytest.raises(KeyError):
+        a.snapshot_slot(42)
+    snap = a.snapshot_slot(0)
+    with pytest.raises(ValueError):
+        wrong.inject_slot(snap)  # page_size mismatch
+    b.add_request(Request(rid=10, prompt=[1], max_new_tokens=6))
+    b.add_request(Request(rid=11, prompt=[2], max_new_tokens=6))
+    b.step()  # both slots claimed
+    from repro.serving.kv_cache import OutOfPages
+    with pytest.raises(OutOfPages):
+        b.inject_slot(snap)  # no free slot
+    assert not b.can_accept(snap.n_pages)
+    a.inject_slot(snap)  # home replica always fits its own snapshot back
+    while a.has_work:
+        a.step()
+    assert r.done and len(r.out_tokens) == 6

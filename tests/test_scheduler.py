@@ -16,9 +16,9 @@ import pytest
 from repro.configs.registry import ASSIGNED_ARCHS
 from repro.models import model as M
 from repro.serving.engine import Request, RequestOutput, ServingEngine
-from repro.serving.scheduler import (DRRScheduler, FCFSScheduler,
-                                     PriorityScheduler, SJFScheduler,
-                                     SamplingParams, SlotView,
+from repro.serving.scheduler import (DRRScheduler, EDFScheduler,
+                                     FCFSScheduler, PriorityScheduler,
+                                     SJFScheduler, SamplingParams, SlotView,
                                      make_scheduler)
 
 KEY = jax.random.PRNGKey(0)
@@ -53,7 +53,7 @@ def test_make_scheduler_registry():
     assert make_scheduler(sched) is sched
     with pytest.raises(ValueError):
         make_scheduler("lifo")
-    for name in ("fcfs", "priority", "sjf", "drr"):
+    for name in ("fcfs", "priority", "sjf", "drr", "edf"):
         assert make_scheduler(name).name == name
 
 
@@ -139,6 +139,40 @@ def test_drr_no_accrual_without_free_slots():
     assert plan.order == [] and sched._deficit == {}
 
 
+def test_edf_admit_order_oracle():
+    """EDF orders by ABSOLUTE deadline (arrival + SLO budget); requests
+    without a deadline sort last, FCFS among themselves."""
+    sched = EDFScheduler()
+    q = [_req(1, arrival=0.0), _req(2, arrival=4.0), _req(3, arrival=1.0),
+         _req(4, arrival=0.5)]
+    q[0].deadline_s = 10.0   # absolute 10.0
+    q[1].deadline_s = 2.0    # absolute  6.0  <- most urgent
+    q[2].deadline_s = 7.0    # absolute  8.0
+    q[3].deadline_s = None   # no SLO: last
+    plan = sched.admit(q, [None] * 4, free_pages=100)
+    assert [r.rid for r in plan.order] == [2, 3, 1, 4]
+    # all-deadline-free queue degenerates to FCFS by arrival
+    free = [_req(1, arrival=3.0), _req(2, arrival=1.0)]
+    assert [r.rid for r in sched.admit(free, [None], 100).order] == [2, 1]
+
+
+def test_edf_victim_evicts_slackest_slot():
+    """Under pool pressure EDF suspends the slot with the LATEST absolute
+    deadline; slots without a deadline are infinitely slack and go first;
+    ties break toward the longest sequence (frees the most pages)."""
+    import dataclasses as dc
+    sched = EDFScheduler()
+    views = [dc.replace(_view(0, seq_len=30), deadline_s=5.0),
+             dc.replace(_view(1, seq_len=4), deadline_s=50.0),
+             dc.replace(_view(2, seq_len=12), deadline_s=20.0)]
+    assert sched.victim(views) == 1  # latest deadline, despite tiny seq
+    views.append(dc.replace(_view(3, seq_len=2), deadline_s=None))
+    assert sched.victim(views) == 3  # no SLO at all: evicted first
+    tied = [dc.replace(_view(0, seq_len=3), deadline_s=None),
+            dc.replace(_view(1, seq_len=9), deadline_s=None)]
+    assert sched.victim(tied) == 1  # tie -> longest
+
+
 # ---------------------------------------------------- engine integration
 def test_engine_sjf_completion_order(smollm):
     """1-slot engine: SJF must complete jobs in cost order regardless of
@@ -168,6 +202,32 @@ def test_engine_drr_completion_alternates(smollm):
         eng.submit(r)
     finish_order = [e.rid for e in eng.stream() if e.finished]
     assert finish_order == [10, 20, 11, 21]
+
+
+def test_engine_edf_completion_order(smollm):
+    """1-slot engine: EDF must serve in deadline order regardless of
+    submission order, and the finished requests report deadline_missed
+    correctly against their own SLO budgets."""
+    cfg, params = smollm
+    reqs = [Request(rid=1, prompt=[2] * 3, max_new_tokens=4, arrival_s=0.0,
+                    deadline_s=500.0),
+            Request(rid=2, prompt=[3] * 3, max_new_tokens=4, arrival_s=0.0,
+                    deadline_s=100.0),
+            Request(rid=3, prompt=[4] * 3, max_new_tokens=4, arrival_s=0.0,
+                    deadline_s=300.0)]
+    eng = ServingEngine(cfg, params, max_batch=1, max_seq=48, eos_id=-1,
+                        page_size=8, scheduler="edf")
+    for r in reqs:
+        eng.submit(r)
+    finish_order = [e.rid for e in eng.stream() if e.finished]
+    assert finish_order == [2, 3, 1]
+    assert eng.stats.policy == "edf"
+    assert not any(r.deadline_missed for r in reqs)  # sub-second run
+    # a missed deadline is visible on the request itself
+    late = Request(rid=9, prompt=[1], max_new_tokens=2, deadline_s=1e-9)
+    eng.submit(late)
+    eng.run()
+    assert late.done and late.deadline_missed
 
 
 def test_engine_priority_inversion_preempts_via_victim(smollm):
