@@ -2,7 +2,7 @@
 
 .PHONY: test test-fast test-slow test-families bench-serving \
 	bench-serving-smoke bench-serving-policy bench-serving-kvtier-mla \
-	bench-serving-router
+	bench-serving-router bench-serving-overlap
 
 # every family where supports_paged() is true — the serving conformance
 # matrix (test ids are fam_<family>, substring-safe: fam_moe != fam_mla_moe)
@@ -23,12 +23,14 @@ test-slow:
 # cross-family serving conformance suite, one family at a time (mirrors the
 # CI family-matrix job): mid-stream-admission oracle, eos/max-token
 # termination, page recycling, streaming terminals, preempt-resume AND
-# cross-replica slot-migration bit-identity — per paged family
+# cross-replica slot-migration bit-identity — per paged family — plus the
+# overlapped-decode-loop bit-identity suite (fused dispatch vs sync loop)
 test-families:
 	@set -e; for f in $(FAMILIES); do \
 		echo "=== conformance: $$f ==="; \
 		python -m pytest -x -q tests/test_serving.py \
 			tests/test_tiered_kv.py tests/test_router.py \
+			tests/test_overlap.py \
 			-k "fam_$$f"; \
 	done
 
@@ -50,6 +52,13 @@ bench-serving-policy:
 bench-serving-kvtier-mla:
 	PYTHONPATH=src python benchmarks/bench_serving.py --smoke \
 		--arch deepseek-v2-lite-16b --trace kvtier
+
+# overlapped decode loop vs the synchronous two-dispatch loop: 100%
+# completion, bit-identical outputs, and the tentpole metric — jitted
+# dispatches per decode step drop from 2 to 1 (reported per decoded token)
+bench-serving-overlap:
+	PYTHONPATH=src python benchmarks/bench_serving.py --smoke \
+		--trace overlap
 
 # multi-replica Router trace: Poisson over 2 replicas (least-loaded +
 # skewed-affinity routes, with cross-replica slot migration) vs 1

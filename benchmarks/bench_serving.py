@@ -26,6 +26,13 @@ Three traces, all Poisson arrivals:
   deadline-miss rate (the EDF policy's target metric), plus
   per-priority-class TTFT p99 so the priority policy's SLO effect is
   visible.
+* ``overlap`` — the overlapped decode loop (``overlap=True``): the fused
+  decode+sample dispatch with one-step-delayed host readback vs the
+  synchronous two-dispatch loop, same trace.  Both must complete 100% with
+  bit-identical outputs; the report pins the tentpole metric — jitted
+  dispatches per decode step drop from 2 (decode + sample) to 1 — and
+  shows dispatches per decoded token.  ``--overlap`` additionally runs the
+  admission trace's continuous engine overlapped.
 * ``router`` — multi-replica serving through the Router/EngineCore split:
   ``--replicas N`` small replicas under least-loaded routing with
   cross-replica slot migration vs ONE N-wide replica with the same total
@@ -119,10 +126,11 @@ def _warm(cfg, params, args, **eng_kw):
 
 
 def bench_mode(mode: str, cfg, params, args, timed_seed: int) -> dict:
-    _warm(cfg, params, args, mode=mode)
+    overlap = bool(getattr(args, "overlap", False)) and mode == "continuous"
+    _warm(cfg, params, args, mode=mode, overlap=overlap)
     eng = ServingEngine(cfg, params, max_batch=args.max_batch,
                         max_seq=args.max_seq, eos_id=-1, mode=mode,
-                        page_size=args.page_size)
+                        page_size=args.page_size, overlap=overlap)
     reqs = make_requests(args.requests, cfg, args.max_new, timed_seed)
     arrivals = poisson_arrivals(args.requests, args.rate, timed_seed)
     wall = drive(eng, reqs, arrivals)
@@ -169,6 +177,61 @@ def bench_admission(cfg, params, args) -> list[dict]:
     if pressure > 1 and speedup < 0.95:  # 5% = wall-clock noise floor
         print("WARNING: continuous materially slower than wave "
               "at batch pressure > 1")
+    return rows
+
+
+def bench_overlap_variant(name: str, cfg, params, args, overlap: bool) -> dict:
+    _warm(cfg, params, args, mode="continuous", overlap=overlap)
+    eng = ServingEngine(cfg, params, max_batch=args.max_batch,
+                        max_seq=args.max_seq, eos_id=-1, mode="continuous",
+                        page_size=args.page_size, overlap=overlap)
+    reqs = make_requests(args.requests, cfg, args.max_new, args.seed)
+    arrivals = poisson_arrivals(args.requests, args.rate, args.seed)
+    wall = drive(eng, reqs, arrivals)
+    s = eng.stats
+    assert all(r.done for r in reqs)
+    return {
+        "variant": name, "wall_s": wall,
+        "completed_pct": 100.0 * sum(1 for r in reqs if not r.rejected)
+        / len(reqs),
+        "tokens": s.tokens_out, "tok_per_s": s.tokens_out / wall,
+        "decode_steps": s.decode_steps, "dispatches": s.decode_dispatches,
+        "disp_per_step": s.decode_dispatches / max(s.decode_steps, 1),
+        "disp_per_tok": s.decode_dispatches / max(s.tokens_out, 1),
+        "latency_p99": s.percentiles("latency_s")["p99"],
+        "out_tokens": {r.rid: list(r.out_tokens) for r in reqs
+                       if not r.rejected},
+    }
+
+
+def bench_overlap(cfg, params, args) -> list[dict]:
+    """Synchronous two-dispatch loop vs the overlapped fused loop."""
+    print(f"\n[overlap] arch={cfg.name} requests={args.requests} "
+          f"max_batch={args.max_batch}")
+    rows = [bench_overlap_variant("sync", cfg, params, args, False),
+            bench_overlap_variant("overlap", cfg, params, args, True)]
+    hdr = ("variant", "wall_s", "done%", "tokens", "tok/s", "steps",
+           "disp", "disp/step", "disp/tok", "lat_p99")
+    print(" ".join(f"{h:>9}" for h in hdr))
+    for r in rows:
+        print(f"{r['variant']:>9} {r['wall_s']:>9.2f} "
+              f"{r['completed_pct']:>9.1f} {r['tokens']:>9d} "
+              f"{r['tok_per_s']:>9.1f} {r['decode_steps']:>9d} "
+              f"{r['dispatches']:>9d} {r['disp_per_step']:>9.2f} "
+              f"{r['disp_per_tok']:>9.3f} {r['latency_p99']:>9.3f}")
+    sync, olap = rows
+    for r in rows:
+        assert r["completed_pct"] == 100.0, \
+            f"{r['variant']} dropped requests on the overlap trace"
+    # the overlapped loop relocates WHEN tokens are read back, never WHAT
+    # they are: outputs must match the synchronous loop bit for bit
+    assert olap["out_tokens"] == sync["out_tokens"], \
+        "overlapped outputs diverge from the synchronous loop"
+    assert sync["disp_per_step"] == 2.0  # decode + sample
+    assert olap["disp_per_step"] == 1.0  # the fused step: tentpole metric
+    print(f"\noverlap: 100% completed, bit-identical; dispatches per decode "
+          f"step 2 -> 1 ({sync['disp_per_tok']:.3f} -> "
+          f"{olap['disp_per_tok']:.3f} per decoded token)")
     return rows
 
 
@@ -486,9 +549,13 @@ def main(argv=None):
                     help="replica count for the router trace (raced "
                          "against ONE replica with the same total "
                          "slot+page budget)")
-    ap.add_argument("--trace", choices=("admission", "kvtier", "policy",
-                                        "router", "all"),
+    ap.add_argument("--trace", choices=("admission", "overlap", "kvtier",
+                                        "policy", "router", "all"),
                     default="all")
+    ap.add_argument("--overlap", action="store_true",
+                    help="run the admission trace's continuous engine with "
+                         "the overlapped decode loop (fused dispatch, "
+                         "one-step-delayed readback)")
     ap.add_argument("--chunk-prefill", type=int, default=8,
                     help="chunked-prefill token budget for the policy "
                          "trace (0 = one-shot prefill)")
@@ -512,6 +579,8 @@ def main(argv=None):
     out = {}
     if args.trace in ("admission", "all"):
         out["admission"] = bench_admission(cfg, params, args)
+    if args.trace in ("overlap", "all"):
+        out["overlap"] = bench_overlap(cfg, params, args)
     if args.trace in ("kvtier", "all"):
         out["kvtier"] = bench_kvtier(cfg, params, args)
     if args.trace in ("policy", "all"):

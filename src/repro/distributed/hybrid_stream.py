@@ -19,10 +19,13 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.kernels import compat
+from repro.kernels.compat import shard_map
+
 
 def ring_all_gather(shard: jax.Array, axis: str) -> jax.Array:
     """All-gather along ``axis`` via ppermute ring (overlappable)."""
-    n = jax.lax.axis_size(axis)
+    n = compat.axis_size(axis)
     idx = jax.lax.axis_index(axis)
     perm = [(i, (i + 1) % n) for i in range(n)]
 
@@ -59,9 +62,9 @@ def streamed_matmul_chain(x: jax.Array, weight_shards: list[jax.Array],
         return x_loc
 
     in_specs = tuple([P(None, None)] + [P(axis, None)] * len(weight_shards))
-    return jax.shard_map(body, mesh=mesh, in_specs=in_specs,
-                         out_specs=P(None, None),
-                         check_vma=False)(x, *weight_shards)
+    return shard_map(body, mesh=mesh, in_specs=in_specs,
+                     out_specs=P(None, None),
+                     check_vma=False)(x, *weight_shards)
 
 
 def alpha_split_matmul(x: jax.Array, w: jax.Array, mesh: Mesh,
@@ -84,7 +87,7 @@ def alpha_split_matmul(x: jax.Array, w: jax.Array, mesh: Mesh,
         if h_act:
             # "read-compute": W sharded on the contraction dim; every shard
             # computes a partial GeMM on resident weights, small output psum'd
-            n = jax.lax.axis_size(axis_store)
+            n = compat.axis_size(axis_store)
             i = jax.lax.axis_index(axis_store)
             x_slice = jax.lax.dynamic_slice_in_dim(
                 x_full, i * (d // n), d // n, axis=1)
@@ -96,7 +99,7 @@ def alpha_split_matmul(x: jax.Array, w: jax.Array, mesh: Mesh,
             parts.append(x_full @ w_gat.astype(x_full.dtype))
         return parts[0] if len(parts) == 1 else jnp.concatenate(parts, -1)
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(P(None, None), P(axis_store, None), P(axis_store, None)),
         out_specs=P(None, None), check_vma=False,

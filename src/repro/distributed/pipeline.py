@@ -16,6 +16,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.kernels.compat import shard_map
+
 
 def pipelined_forward(layer_fn, params_stages, x_microbatches, mesh: Mesh,
                       axis: str = "pod"):
@@ -60,7 +62,7 @@ def pipelined_forward(layer_fn, params_stages, x_microbatches, mesh: Mesh,
             jnp.where(stage == n - 1, outs, jnp.zeros_like(outs)), axis)
         return outs
 
-    return jax.shard_map(
+    return shard_map(
         body, mesh=mesh,
         in_specs=(P(axis), P(*([None] * x_microbatches.ndim))),
         out_specs=P(*([None] * x_microbatches.ndim)),

@@ -1,13 +1,45 @@
-"""Pallas-TPU API compatibility shims.
+"""JAX API compatibility shims (Pallas-TPU renames + shard_map move).
 
 jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` across
 0.4.x -> 0.5.x; the kernels import the symbol from here so they run on either
 side of the rename.
+
+``shard_map`` graduated from ``jax.experimental.shard_map.shard_map`` to
+``jax.shard_map`` (and its ``check_rep`` kwarg became ``check_vma``) across
+0.4.x -> 0.6.x.  Every call site in the repo goes through the resolver below
+with the NEW spelling (``jax.shard_map`` semantics, ``check_vma=``); on an
+older install the wrapper translates the kwarg and falls back to the
+experimental import.
 """
 
 from __future__ import annotations
 
+import jax
 from jax.experimental.pallas import tpu as pltpu
 
 CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
     pltpu, "TPUCompilerParams")
+
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_legacy
+
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kw):
+        """``jax.shard_map``-compatible wrapper over the pre-0.6 API:
+        ``check_vma`` (new name) maps onto ``check_rep`` (old name)."""
+        if check_vma is not None:
+            kw["check_rep"] = check_vma
+        return _shard_map_legacy(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, **kw)
+
+
+if hasattr(jax.lax, "axis_size"):
+    axis_size = jax.lax.axis_size
+else:
+
+    def axis_size(axis_name):
+        """``jax.lax.axis_size`` fallback: psum of a literal 1 is folded to
+        the axis size at trace time, so callers still get a Python int."""
+        return jax.lax.psum(1, axis_name)

@@ -38,9 +38,12 @@ def _kernel(page_ref, thr_ref, addr_ref, voted_ref, valid_ref, out_ref):
         addr = addr_ref[0, i]
         val = voted_ref[0, i]
         ok = valid_ref[0, i]
-        cur = pl.load(out_ref, (0, pl.ds(addr, 1)))
-        new = jnp.where(ok, val, cur[0])
-        pl.store(out_ref, (0, pl.ds(addr, 1)), new[None])
+        # every index position must be a Slice: a raw int in the tuple breaks
+        # jax 0.4.x's load/store discharge rules (int has no .shape), so the
+        # leading block-row index is pl.ds(0, 1) rather than 0
+        cur = pl.load(out_ref, (pl.ds(0, 1), pl.ds(addr, 1)))
+        new = jnp.where(ok, val, cur[0, 0])
+        pl.store(out_ref, (pl.ds(0, 1), pl.ds(addr, 1)), new[None, None])
         return 0
 
     jax.lax.fori_loop(0, k, body, 0)

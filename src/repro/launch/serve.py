@@ -8,7 +8,11 @@ never collide across replicas — the router spreads requests over
 ``--replicas N`` engine replicas under ``--route`` (round_robin /
 least_loaded / session_affinity) and migrates slots off page-starved
 replicas, and each replica runs the paged/tiered KV serving loop under the
-``--policy`` scheduler (fcfs / priority / sjf / drr / edf).
+``--policy`` scheduler (fcfs / priority / sjf / drr / edf).  ``--overlap``
+switches every replica to the overlapped decode loop — decode + sampling
+fused into ONE jitted dispatch per step, sampled tokens held on device and
+read back one step late, so step N+1 is enqueued before step N's token
+reaches the host; outputs stay bit-identical to the synchronous loop.
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
       --requests 8 --max-new 16 --replicas 2 --route least_loaded \
@@ -63,6 +67,11 @@ def main():
                          "paged KV cache, else wave")
     ap.add_argument("--page-size", type=int, default=16,
                     help="tokens per KV page (continuous mode)")
+    ap.add_argument("--overlap", action="store_true",
+                    help="overlapped decode loop: fused decode+sample "
+                         "dispatch with one-step-delayed host readback — "
+                         "1 jitted dispatch per decode step instead of 2, "
+                         "bit-identical outputs")
     ap.add_argument("--policy", default="fcfs", choices=sorted(POLICIES),
                     help="per-replica admission/preemption policy "
                          "(serving.scheduler)")
@@ -96,7 +105,7 @@ def main():
         cfg, params, replicas=args.replicas, route=args.route,
         migrate=not args.no_migrate, seed_base=args.seed,
         max_batch=args.max_batch, max_seq=args.max_seq, eos_id=-1,
-        mode=args.mode, page_size=args.page_size,
+        mode=args.mode, page_size=args.page_size, overlap=args.overlap,
         scheduler=make_scheduler(args.policy,
                                  chunk_tokens=args.chunk_prefill or None))
     rng = jax.random.PRNGKey(42)

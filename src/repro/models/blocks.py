@@ -6,6 +6,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels.compat import shard_map
 from repro.models.attention import (_repeat_kv, chunked_attention,
                                     decode_attention, gather_kv_pages,
                                     gather_paged_rows, paged_chunk_attention,
@@ -454,7 +455,7 @@ def attn_decode_sharded(params: dict, x: jax.Array, cfg: ModelConfig,
 
     bspec = batch_axes
     cache_spec = P(bspec, "model", None, None)
-    out, k_cache, v_cache = jax.shard_map(
+    out, k_cache, v_cache = shard_map(
         body, mesh=mesh,
         in_specs=(P(bspec, None, None, None), P(bspec, None, None, None),
                   P(bspec, None, None, None), cache_spec, cache_spec, P()),

@@ -965,6 +965,37 @@ def decode_step_paged(params: dict, cfg: ModelConfig, token: jax.Array,
     return lm_head(params, cfg, x), cache
 
 
+def decode_and_sample_paged(params: dict, cfg: ModelConfig,
+                            tok_host: jax.Array, tok_dev: jax.Array,
+                            use_dev: jax.Array, cache: dict,
+                            active: jax.Array, sample_fn
+                            ) -> tuple[jax.Array, dict]:
+    """Fused decode + sample: the overlapped serving loop's ONE dispatch.
+
+    The input token is merged on-device — ``where(use_dev, tok_dev,
+    tok_host)`` — so a slot whose previous token was sampled by the
+    previous fused step (``tok_dev``, still unread by the host) chains
+    straight into this step with no host round-trip, while freshly
+    prefilled / injected slots feed their host-known first token through
+    ``tok_host``.  ``sample_fn(logits) -> tokens`` keeps this module
+    sampler-agnostic; the engine closes it over the per-request sampling
+    parameter rows.  Returns (tokens [B], cache); tokens of inactive rows
+    are garbage exactly like ``decode_step_paged``'s logits.
+    """
+    token = jnp.where(jnp.asarray(use_dev, bool), tok_dev, tok_host)
+    logits, cache = decode_step_paged(params, cfg, token, cache, active)
+    return sample_fn(logits), cache
+
+
+def decode_and_sample(params: dict, cfg: ModelConfig, tok_host: jax.Array,
+                      tok_dev: jax.Array, use_dev: jax.Array, cache: dict,
+                      sample_fn) -> tuple[jax.Array, dict]:
+    """`decode_and_sample_paged` for the legacy shared-cursor (wave) cache."""
+    token = jnp.where(jnp.asarray(use_dev, bool), tok_dev, tok_host)
+    logits, cache = decode_step(params, cfg, token, cache)
+    return sample_fn(logits), cache
+
+
 def _conv_tail(h, lp, cfg: ModelConfig):
     """Last K-1 conv inputs of the sequence (pre-activation), for decode."""
     z_xbc_dt = linear(lp["in_proj"], h[:, -(cfg.ssm_conv - 1):, :])

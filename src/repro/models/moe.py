@@ -27,6 +27,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
 from repro.distributed import ctx
+from repro.kernels.compat import shard_map
 from repro.models.layers import dense_weight, init_linear, linear
 
 CAPACITY_FACTOR = 2.0
@@ -167,7 +168,7 @@ def moe_ffn(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
             y = _moe_expert_parallel(p, xloc.reshape(nl, dd), cfg, e)
             return y.reshape(xloc.shape).astype(x.dtype)
 
-        y = jax.shard_map(
+        y = shard_map(
             body, mesh=mesh,
             in_specs=(specs, P(dp, None, None)),
             out_specs=P(dp, None, None),

@@ -95,6 +95,25 @@ and decode numerics differ; only the flash tier preserves exact logits);
 benchmark compares against.  Both count ``EngineStats.pool_exhausted``
 instead of crashing the engine loop.
 
+Overlapped decode (``overlap=True``): the synchronous loop pays two jitted
+dispatches and one host sync per decode step (decode, then sample, then
+``np.asarray`` on the tokens).  The overlapped loop fuses decode + per-
+request sampling into ONE jitted step whose sampled tokens stay on device
+and chain straight into the next dispatch (``where(use_dev, tok_dev,
+tok_host)``), and reads tokens back one step LATE: step N+1 is dispatched
+before step N's tokens are read, so the readback overlaps the compute.
+Consequences, all bounded by the single in-flight step: finishes are
+detected at the lagged drain (length/capacity are host-predicted one step
+ahead and masked out of the next dispatch; an eos'd slot runs one
+speculative step whose writes stay behind the lens mask and whose token a
+slot-epoch check discards); host mirrors (``slot_len`` / ``last_np`` /
+``out_tokens``) trail by the undrained token, so scheduler views are one
+step stale; ``snapshot_slot`` drains first so the migration wire format
+stays fully materialized.  Token streams are bit-identical to the
+synchronous loop for every paged family, greedy and seed-pinned stochastic
+(tests/test_overlap.py); incompatible with ``watchdog`` (no retained
+pre-step cache to replay).
+
 Fault hooks: per-step heartbeat timestamps; a pluggable ``watchdog`` sees
 (step, wall_time) and may trigger re-dispatch — tests inject artificial
 stragglers through it.  Re-dispatch replays the step from the retained
@@ -290,11 +309,73 @@ _jit_swap_in = jax.jit(model_lib.swap_in_pages)
 _jit_sample = jax.jit(sampler.sample_batch)
 
 
+# the overlapped loop's fused decode+sample step: ONE jitted dispatch per
+# decode step instead of decode followed by a separate sample dispatch.
+# ``greedy_only`` is static (all-greedy batches trace a bare argmax);
+# ``donate`` hands the cache buffers to XLA for in-place reuse — requested
+# only off-CPU (the CPU backend ignores donation with a warning per call)
+@functools.lru_cache(maxsize=None)
+def _jit_decode_sample_paged(cfg: ModelConfig, donate: bool):
+    def step(p, tok_host, tok_dev, use_dev, c, a, seeds, counts, temps,
+             topk, topp, greedy_only):
+        return model_lib.decode_and_sample_paged(
+            p, cfg, tok_host, tok_dev, use_dev, c, a,
+            lambda lg: sampler.fused_sample(
+                lg, seeds, counts, temps, topk, topp,
+                greedy_only=greedy_only))
+    kw = {"donate_argnums": (4,)} if donate else {}
+    return jax.jit(step, static_argnames=("greedy_only",), **kw)
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_decode_sample(cfg: ModelConfig, donate: bool):
+    def step(p, tok_host, tok_dev, use_dev, c, seeds, counts, temps,
+             topk, topp, greedy_only):
+        return model_lib.decode_and_sample(
+            p, cfg, tok_host, tok_dev, use_dev, c,
+            lambda lg: sampler.fused_sample(
+                lg, seeds, counts, temps, topk, topp,
+                greedy_only=greedy_only))
+    kw = {"donate_argnums": (4,)} if donate else {}
+    return jax.jit(step, static_argnames=("greedy_only",), **kw)
+
+
+class _LazyPagePayload:
+    """A spilled page's ``(k, v)`` payload still on its way to the host.
+
+    ``copy_to_host_async`` starts the device→host DMA at spill time; the
+    numpy materialization happens only when the payload is actually needed
+    (prefetch scatter or migration snapshot), so the spill itself never
+    blocks the engine loop on a device sync.
+    """
+
+    __slots__ = ("k", "v")
+
+    def __init__(self, k, v):
+        self.k, self.v = k, v
+        k.copy_to_host_async()
+        v.copy_to_host_async()
+
+    def materialize(self) -> tuple[np.ndarray, np.ndarray]:
+        return np.asarray(self.k), np.asarray(self.v)
+
+
+def _payload_np(payload) -> tuple[np.ndarray, np.ndarray]:
+    if isinstance(payload, _LazyPagePayload):
+        return payload.materialize()
+    return payload
+
+
 @dataclasses.dataclass
 class EngineStats:
     prefills: int = 0
     prefill_chunks: int = 0    # chunked-prefill passes (chunk granularity)
     decode_steps: int = 0
+    # jitted dispatches attributable to decoding (decode + sample in the
+    # synchronous loop = 2 per step; the overlapped fused step = 1).
+    # ``decode_dispatches / decode_steps`` is the dispatches-per-decoded-
+    # token figure the overlap benchmark reports.
+    decode_dispatches: int = 0
     tokens_out: int = 0
     straggler_events: int = 0
     wall_decode_s: float = 0.0
@@ -364,7 +445,14 @@ class EngineCore:
                  page_size: int = 16, num_pages: Optional[int] = None,
                  kv_tier: str = "none", exhaust_policy: str = "requeue",
                  flash_pages: Optional[int] = None,
-                 scheduler: "Scheduler | str | None" = None):
+                 scheduler: "Scheduler | str | None" = None,
+                 overlap: bool = False):
+        if overlap and watchdog is not None:
+            raise ValueError(
+                "overlap=True keeps one decode step in flight past the host "
+                "readback, so the watchdog's replay-from-pre-step-cache "
+                "re-dispatch contract cannot hold; use the synchronous loop "
+                "with a watchdog")
         if mode == "auto":
             mode = ("continuous" if model_lib.supports_paged(cfg) else "wave")
         if mode == "continuous" and not model_lib.supports_paged(cfg):
@@ -386,6 +474,13 @@ class EngineCore:
         self.watchdog = watchdog
         self.straggler_timeout_s = straggler_timeout_s
         self.mode = mode
+        self.overlap = overlap
+        # overlapped-loop state: at most ONE dispatched-but-undrained fused
+        # step; per-slot in-flight token counts (0 or 1) and release epochs
+        # that invalidate pending rows whose slot was reassigned in between
+        self._pending: Optional[dict] = None
+        self._inflight: list[int] = [0] * max_batch
+        self._slot_epoch: list[int] = [0] * max_batch
         self.kv_tier = kv_tier
         self.exhaust_policy = exhaust_policy
         self.scheduler = make_scheduler(scheduler)
@@ -439,7 +534,14 @@ class EngineCore:
         else:
             self.cache = model_lib.init_cache(cfg, max_batch, max_seq)
             self.last_token = jnp.zeros((max_batch,), jnp.int32)
+            self._wave_last_np = np.zeros((max_batch,), np.int32)
+            self._wave_len = 0  # host prediction of cache["len"]
             self._decode = _jit_decode(cfg)
+        if overlap:
+            donate = jax.default_backend() != "cpu"
+            self._decode_sample = (
+                _jit_decode_sample_paged(cfg, donate)
+                if mode == "continuous" else _jit_decode_sample(cfg, donate))
 
     # ------------------------------------------------------------------
     # command surface: add / abort
@@ -591,6 +693,10 @@ class EngineCore:
         """
         if self.mode != "continuous":
             raise ValueError("snapshot_slot needs mode='continuous'")
+        # the wire format is fully drained state: an in-flight fused step's
+        # token must land in out_tokens / slot_len / last_np before they are
+        # copied out, or the migrated run would drop it
+        self._drain_pending()
         for i, req in enumerate(self.slots):
             if req is not None and req.rid == rid:
                 break
@@ -605,8 +711,8 @@ class EngineCore:
             for (j, _pid), payload in zip(hot, payloads):
                 pages[j] = payload
         for j, pid in enumerate(self.slot_pages[i]):
-            if pid == 0:  # cold: payload already lives host-side
-                pages[j] = self.allocator.fetch((i, j))
+            if pid == 0:  # cold: payload already host-side (or in DMA flight)
+                pages[j] = _payload_np(self.allocator.fetch((i, j)))
         snap = SlotSnapshot(
             req=req, slot_len=self.slot_len[i],
             last_token=int(self.last_np[i]),
@@ -798,6 +904,7 @@ class EngineCore:
         pids — ONE bucketed ``swap_in_pages`` call (null-page padded); the
         caller remaps the owning block-table row.  Shared by tier prefetch
         and migration inject."""
+        payloads = [_payload_np(p) for p in payloads]
         ks = np.stack([p[0] for p in payloads], axis=1)
         vs = np.stack([p[1] for p in payloads], axis=1)
         bpids = self._bucket_pids(pids)
@@ -806,7 +913,11 @@ class EngineCore:
             widths = [(0, 0)] * ks.ndim
             widths[1] = (0, pad)
             ks, vs = np.pad(ks, widths), np.pad(vs, widths)
-        self.cache = _jit_swap_in(self.cache, bpids, ks, vs)
+        # device_put starts the host→device transfer asynchronously; the
+        # swap_in scatter then composes with it by dataflow instead of the
+        # jit call blocking on an implicit synchronous upload
+        self.cache = _jit_swap_in(self.cache, bpids, jax.device_put(ks),
+                                  jax.device_put(vs))
 
     def _spill(self, items: list[tuple[tuple[int, int], int]]) -> int:
         """Swap ``(key=(slot, page_idx), pid)`` hot pages out to flash;
@@ -821,8 +932,13 @@ class EngineCore:
         if not items:
             return 0
         pids = [pid for _, pid in items]
-        for (key, _pid), payload in zip(items, self._gather_pages(pids)):
-            self.allocator.store(key, payload)
+        # one bucketed gather, then per-page device columns wrapped as lazy
+        # payloads: the device→host copies run asynchronously and only
+        # materialize when prefetch / snapshot actually reads them, so a
+        # spill never stalls the loop behind a blocking gather
+        ks, vs = _jit_swap_out(self.cache, self._bucket_pids(pids))
+        for j, (key, _pid) in enumerate(items):
+            self.allocator.store(key, _LazyPagePayload(ks[:, j], vs[:, j]))
             slot, page_idx = key
             self.block[slot, page_idx] = 0
             self.slot_pages[slot][page_idx] = 0
@@ -923,6 +1039,11 @@ class EngineCore:
     # following steps) while the rest of the batch keeps decoding
     # ------------------------------------------------------------------
     def _release_slot(self, i: int) -> None:
+        # a pending fused-step row for this slot is now stale: the epoch
+        # bump makes the lagged drain skip it (the slot may already host a
+        # different request by then)
+        self._slot_epoch[i] += 1
+        self._inflight[i] = 0
         self.slots[i] = None
         self.allocator.free([p for p in self.slot_pages[i] if p != 0])
         if self.kv_tier == "flash":
@@ -1088,6 +1209,7 @@ class EngineCore:
                 req.t_admit = now
                 req.t_first_token = t1
             req.out_tokens.append(tok)
+            self.stats.tokens_out += 1
             self.last_np[i] = tok
             self.slot_len[i] = len0
             self.slots[i] = req
@@ -1139,6 +1261,7 @@ class EngineCore:
                 if req.t_first_token == 0.0:
                     req.t_first_token = time.monotonic()
                 req.out_tokens.append(tok)
+                self.stats.tokens_out += 1
                 self.last_np[i] = tok
                 reason = self._finish_reason_for(req, tok, pos)
                 if reason is not None:
@@ -1154,7 +1277,9 @@ class EngineCore:
             req = self.slots[i]
             if req is None or self.suspended[i] or self.prefilling[i]:
                 continue
-            pj = self.slot_len[i] // self.page_size
+            # the next write position counts the in-flight token the host
+            # has not drained yet (slot_len is the DRAINED length)
+            pj = (self.slot_len[i] + self._inflight[i]) // self.page_size
             if pj < len(self.slot_pages[i]):
                 continue
             try:
@@ -1173,6 +1298,141 @@ class EngineCore:
             self.slot_pages[i].append(pid)
             self.block[i, pj] = pid
 
+    # ------------------------------------------------------------------
+    # overlapped decode: dispatch step N+1 before reading step N's tokens
+    # ------------------------------------------------------------------
+    def _sampling_rows(self, items: list[tuple[int, Request]],
+                       lag: Callable[[int], int]
+                       ) -> tuple[bool, tuple[np.ndarray, ...]]:
+        """Per-row sampling parameter arrays for a fused dispatch.
+
+        ``lag(i)`` is how many of slot i's tokens are still in flight: the
+        sampler cursor (``counts``) must index the token ABOUT to be
+        sampled, which trails ``len(out_tokens)`` by the undrained ones.
+        """
+        b = self.max_batch
+        temps = np.zeros((b,), np.float32)
+        seeds = np.zeros((b,), np.int32)
+        counts = np.zeros((b,), np.int32)
+        topk = np.zeros((b,), np.int32)
+        topp = np.ones((b,), np.float32)
+        for i, req in items:
+            sp = req.sampling
+            temps[i] = sp.temperature
+            seeds[i] = sp.seed if sp.seed is not None else req.rid
+            counts[i] = len(req.out_tokens) + lag(i)
+            topk[i] = sp.top_k
+            topp[i] = sp.top_p
+        greedy_only = all(r.sampling.temperature <= 0.0 for _, r in items)
+        return greedy_only, (seeds, counts, temps, topk, topp)
+
+    def _drain_pending(self) -> None:
+        """Read back and account the in-flight fused step (no-op without).
+
+        This is the lagged finish point: eos shows up here one engine call
+        after the token was computed, and the speculative extra step a
+        to-be-finished slot may have run in between is discarded via the
+        slot-epoch check when its release bumps the epoch.
+        """
+        pend, self._pending = self._pending, None
+        if pend is not None:
+            self._drain_rows(pend)
+
+    def _drain_rows(self, pend: dict) -> None:
+        tok_np = np.asarray(pend["tok"])  # blocks on THIS step only; any
+        # younger dispatch keeps running behind it
+        if self.mode == "continuous":
+            for i, req, seq_after, epoch in pend["rows"]:
+                if (req.done or self.slots[i] is not req
+                        or self._slot_epoch[i] != epoch):
+                    continue  # slot reassigned/released since dispatch
+                self._inflight[i] -= 1
+                t = int(tok_np[i])
+                self.last_np[i] = t
+                req.out_tokens.append(t)
+                self.stats.tokens_out += 1
+                self.slot_len[i] = seq_after
+                reason = self._finish_reason_for(req, t, seq_after)
+                if reason is not None:
+                    self._finish(i, req, reason, token=t)
+                else:
+                    self._emit(req, t)
+        else:
+            for i, req, seq_after in pend["rows"]:
+                if req.done or self.slots[i] is not req:
+                    continue
+                t = int(tok_np[i])
+                self._wave_last_np[i] = t
+                req.out_tokens.append(t)
+                self.stats.tokens_out += 1
+                reason = None
+                if t == self.eos_id:
+                    reason = "eos"
+                elif len(req.out_tokens) >= req.max_new_tokens:
+                    reason = "length"
+                elif seq_after >= self.max_seq - 1:
+                    reason = "capacity"
+                if reason is not None:
+                    self._finish(i, req, reason, token=t)
+                else:
+                    self._emit(req, t)
+
+    def _overlap_round_continuous(self, active_list: list[bool]) -> None:
+        """One overlapped round: fused-dispatch the next decode step, THEN
+        drain the previous one — its host readback runs concurrently with
+        the compute just enqueued, so the device never waits on the host
+        between steps."""
+        items = [(i, self.slots[i]) for i in range(self.max_batch)
+                 if active_list[i]]
+        greedy_only, sp_rows = self._sampling_rows(
+            items, lag=lambda i: self._inflight[i])
+        use_dev = np.asarray([n > 0 for n in self._inflight])
+        old, self._pending = self._pending, None
+        tok_dev = (old["tok"] if old is not None
+                   else np.zeros((self.max_batch,), np.int32))
+        t0 = time.monotonic()
+        # numpy args MUST be snapshotted: on the CPU backend jit wraps host
+        # buffers zero-copy, so the async-executing step would otherwise read
+        # ``last_np`` / ``block`` concurrently with the in-place mutations
+        # the drain / spill below performs (a real, observed data race)
+        tok, cache = self._decode_sample(
+            self.params, self.last_np.copy(), tok_dev, use_dev,
+            {**self.cache, "block": self.block.copy()},
+            np.asarray(active_list), *sp_rows, greedy_only=greedy_only)
+        # wall_decode_s measures DISPATCH time here (the compute itself is
+        # deliberately not awaited); bench wall clocks stay end-to-end
+        self.stats.wall_decode_s += time.monotonic() - t0
+        cache.pop("block")  # authoritative copy stays host-side
+        self.cache = cache
+        self.stats.decode_steps += 1
+        self.stats.decode_dispatches += 1
+        rows = []
+        for i, req in items:
+            seq_after = self.slot_len[i] + self._inflight[i] + 1
+            rows.append((i, req, seq_after, self._slot_epoch[i]))
+            self._inflight[i] += 1
+        self._pending = {"tok": tok, "rows": rows}
+        if old is not None:
+            self._drain_rows(old)
+
+    def _mask_predicted_finishes(self, active_list: list[bool]) -> None:
+        """Exclude slots whose undrained token already finishes them.
+
+        Length and capacity are host-predictable one step ahead, so those
+        slots must not run a wasted extra step; eos is only discoverable at
+        drain — an eos'd slot runs one speculative step whose writes land
+        beyond its lens mask (or are re-prefilled by the next occupant) and
+        whose token the epoch check discards."""
+        for i in range(self.max_batch):
+            if not active_list[i] or not self._inflight[i]:
+                continue
+            req = self.slots[i]
+            if (len(req.out_tokens) + self._inflight[i]
+                    >= req.max_new_tokens
+                    or self.slot_len[i] + self._inflight[i]
+                    >= self.max_seq - 1):
+                active_list[i] = False
+
     def _step_continuous(self) -> bool:
         self._resumed_now = set()
         if self.kv_tier == "flash":
@@ -1180,14 +1440,19 @@ class EngineCore:
         self._admit_continuous()
         chunks_ran = self._prefill_chunks()
         if all(s is None for s in self.slots):
+            self._drain_pending()  # discard a stale speculative step
             return bool(self.queue)
         self._ensure_pages()
         active_list = [self.slots[i] is not None and not self.suspended[i]
                        and not self.prefilling[i]
                        for i in range(self.max_batch)]
+        if self.overlap:
+            self._mask_predicted_finishes(active_list)
         if not any(active_list):
-            if chunks_ran:
-                self._idle_steps = 0  # chunk progress is progress
+            had_pending = self._pending is not None
+            self._drain_pending()  # lagged finishes still need to land
+            if chunks_ran or had_pending:
+                self._idle_steps = 0  # chunk/drain progress is progress
                 return True
             # everything suspended and nothing resumed: with an unbounded
             # flash tier the head-of-line resume always succeeds within one
@@ -1203,6 +1468,9 @@ class EngineCore:
                 self._idle_steps = 0
             return True
         self._idle_steps = 0
+        if self.overlap:
+            self._overlap_round_continuous(active_list)
+            return True
         active = np.asarray(active_list)
         pre_cache = {**self.cache, "block": self.block}  # for re-dispatch
         t0 = time.monotonic()
@@ -1217,6 +1485,7 @@ class EngineCore:
         cache.pop("block")  # authoritative copy stays host-side
         self.cache = cache
         self.stats.decode_steps += 1
+        self.stats.decode_dispatches += 2  # decode + separate sample
         self.stats.wall_decode_s += dt
         tok_np = self._sample_rows(  # one sync per step
             logits, [(i, r) for i, r in enumerate(self.slots)
@@ -1246,6 +1515,10 @@ class EngineCore:
         per-slot cache to evict)."""
         if any(s is not None for s in self.slots):
             return
+        # with overlap, the call that drains a wave's last tokens has
+        # already dispatched one speculative step; all its rows are stale
+        # now (every request finished) — retire it before re-priming
+        self._drain_pending()
         if not self.queue:
             return
         plan = self.scheduler.admit(list(self.queue), self._views(),
@@ -1271,6 +1544,8 @@ class EngineCore:
         tok_np = self._sample_rows(
             logits, [(row, r) for row, r in enumerate(wave)])
         self.last_token = jnp.asarray(tok_np)
+        self._wave_last_np = np.asarray(tok_np, np.int32).copy()
+        self._wave_len = plen  # host prediction of cache["len"]
         t1 = time.monotonic()
         for i, r in enumerate(wave):
             self.slots[i] = r
@@ -1278,6 +1553,7 @@ class EngineCore:
             r.t_first_token = t1
             tok = int(tok_np[i])
             r.out_tokens.append(tok)
+            self.stats.tokens_out += 1
             reason = self._finish_reason_for(r, tok, len(r.prompt))
             if reason == "capacity":
                 reason = None  # wave cursor checked against cache len below
@@ -1286,10 +1562,52 @@ class EngineCore:
             else:
                 self._emit(r, tok)
 
+    def _overlap_round_wave(self) -> None:
+        """Wave-mode overlapped round: same dispatch-then-drain shape as
+        continuous, minus slot churn (no admission mid-wave, no epochs —
+        row liveness is just ``slots[i] is req``)."""
+        items = [(i, r) for i, r in enumerate(self.slots) if r is not None]
+        old, self._pending = self._pending, None
+        live = set()
+        if old is not None:
+            for i, req, _sa in old["rows"]:
+                if self.slots[i] is req and not req.done:
+                    live.add(i)
+        if self._wave_len >= self.max_seq - 1:
+            # shared cursor at capacity: nothing more may be dispatched (a
+            # write at max_seq would overflow the cache); the drain below
+            # capacity-finishes every surviving row
+            if old is not None:
+                self._drain_rows(old)
+            return
+        greedy_only, sp_rows = self._sampling_rows(
+            items, lag=lambda i: 1 if i in live else 0)
+        use_dev = np.asarray([i in live for i in range(self.max_batch)])
+        tok_dev = (old["tok"] if old is not None
+                   else np.zeros((self.max_batch,), np.int32))
+        t0 = time.monotonic()
+        # snapshot: CPU jit aliases numpy inputs zero-copy and the drain
+        # below mutates ``_wave_last_np`` while this step is still running
+        tok, cache = self._decode_sample(
+            self.params, self._wave_last_np.copy(), tok_dev, use_dev,
+            self.cache, *sp_rows, greedy_only=greedy_only)
+        self.stats.wall_decode_s += time.monotonic() - t0
+        self.cache = cache
+        self.stats.decode_steps += 1
+        self.stats.decode_dispatches += 1
+        self._wave_len += 1
+        self._pending = {"tok": tok,
+                         "rows": [(i, r, self._wave_len) for i, r in items]}
+        if old is not None:
+            self._drain_rows(old)
+
     def _step_wave(self) -> bool:
         self._admit_wave()
         if all(s is None for s in self.slots):
             return bool(self.queue)
+        if self.overlap:
+            self._overlap_round_wave()
+            return True
         pre_cache = self.cache
         t0 = time.monotonic()
         logits, cache = self._decode(self.params, self.last_token, pre_cache)
@@ -1301,6 +1619,7 @@ class EngineCore:
                                          pre_cache)
         self.cache = cache
         self.stats.decode_steps += 1
+        self.stats.decode_dispatches += 2  # decode + separate sample
         self.stats.wall_decode_s += dt
         tok_np = self._sample_rows(
             logits, [(i, r) for i, r in enumerate(self.slots)

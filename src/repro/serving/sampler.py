@@ -56,6 +56,22 @@ def sample_batch(logits: jax.Array, seeds: jax.Array, counts: jax.Array,
     return jnp.where(temperature > 0.0, sampled, greedy_tok)
 
 
+def fused_sample(logits: jax.Array, seeds: jax.Array, counts: jax.Array,
+                 temperature: jax.Array, top_k: jax.Array, top_p: jax.Array,
+                 greedy_only: bool = False) -> jax.Array:
+    """``sample_batch`` shaped for fusion into a jitted decode step.
+
+    ``greedy_only`` is a STATIC flag (the engine knows host-side whether any
+    batch row is stochastic): all-greedy batches trace a bare argmax instead
+    of dragging the sort/top-k/top-p machinery into every decode dispatch.
+    Greedy rows of a mixed batch still argmax inside ``sample_batch``, so
+    both traces agree bit-for-bit on greedy rows.
+    """
+    if greedy_only:
+        return greedy(logits)
+    return sample_batch(logits, seeds, counts, temperature, top_k, top_p)
+
+
 def sample(logits: jax.Array, key: jax.Array, temperature: float = 1.0,
            top_k: int = 0, top_p: float = 1.0) -> jax.Array:
     """logits: [B, V] -> tokens [B]."""

@@ -29,6 +29,7 @@ class TokenTime:
     stalled_on_reads: float
     kv_tier_bytes: float = 0.0  # KV spill+prefetch bytes this token (all ch.)
     kv_bus_s: float = 0.0       # per-channel bus seconds the KV tier used
+    host_gap_s: float = 0.0     # host dispatch gap added on top of compute
 
     @property
     def tokens_per_s(self) -> float:
@@ -70,11 +71,21 @@ def decode_token_time(cfg: ModelConfig, flash: FlashSpec,
                       tile_override: tiling.TileShape | None = None,
                       prefetch_bytes: float = 32e6,
                       kv_spill_bytes: float = 0.0,
-                      kv_prefetch_bytes: float = 0.0) -> TokenTime:
+                      kv_prefetch_bytes: float = 0.0,
+                      host_dispatch_s: float = 0.0,
+                      n_dispatches: int = 2,
+                      overlap_dispatch: bool = False) -> TokenTime:
     """Simulate one decode token; ``kv_spill_bytes``/``kv_prefetch_bytes``
     are the token's tiered-KV page traffic (total across channels, e.g. from
     ``EngineStats.kv_spill_bytes / tokens_out``), accounted as sliced plain
-    write/read requests riding the Slice Control bubbles."""
+    write/read requests riding the Slice Control bubbles.
+
+    ``host_dispatch_s`` prices the serving loop's host-side overhead per
+    jitted dispatch (default 0 = ideal host).  A synchronous loop pays
+    ``n_dispatches`` gaps per token serially (decode + sample = 2); the
+    overlapped loop (``overlap_dispatch=True``, one fused dispatch enqueued
+    while the previous step still computes) hides the gap behind compute —
+    only ``max(0, gap - compute)`` of it can ever surface as latency."""
     npu = npu or DEFAULT_NPU
     act_bytes = 1.0 if bytes_per_elem >= 1.0 else 2.0  # W4A16 -> 16-bit acts
     kv_b = int(act_bytes)
@@ -126,8 +137,11 @@ def decode_token_time(cfg: ModelConfig, flash: FlashSpec,
                           kv_read_bytes=kv_prefetch_bytes / flash.channels,
                           kv_bw=flash.bw_channel,
                           kv_page_bytes=flash.page_bytes)
+    gap = n_dispatches * host_dispatch_s
+    if overlap_dispatch:
+        gap = max(0.0, gap - res.time)
     return TokenTime(
-        total=res.time,
+        total=res.time + gap,
         npu_phase_time=npu_phase_time,
         channel_util=res.util,
         channel_bytes=channel_bytes,
@@ -135,6 +149,7 @@ def decode_token_time(cfg: ModelConfig, flash: FlashSpec,
         stalled_on_reads=res.stalled_on_reads,
         kv_tier_bytes=kv_spill_bytes + kv_prefetch_bytes,
         kv_bus_s=res.kv_bus_s,
+        host_gap_s=gap,
     )
 
 

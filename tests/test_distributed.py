@@ -123,12 +123,13 @@ def test_grad_compress_allreduce_traffic():
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.distributed.grad_compress import psum_compressed
+from repro.kernels.compat import shard_map
 mesh = jax.make_mesh((8,), ('data',))
 g = jax.random.normal(jax.random.PRNGKey(0), (8, 128)) * 0.1
 with mesh:
-    out = jax.shard_map(lambda g: psum_compressed(g, 'data'), mesh=mesh,
-                        in_specs=P('data'), out_specs=P('data'),
-                        check_vma=False)(g)
+    out = shard_map(lambda g: psum_compressed(g, 'data'), mesh=mesh,
+                    in_specs=P('data'), out_specs=P('data'),
+                    check_vma=False)(g)
 ref = g.mean(0)
 rel = float(jnp.linalg.norm(out[0] - ref) / jnp.linalg.norm(ref))
 assert rel < 0.05, rel

@@ -45,6 +45,12 @@ def _run(cfg, params, reqs, max_batch=2, max_seq=48, **kw):
     for r in reqs:
         eng.submit(r)
     eng.run()
+    # accounting invariant: every token appended to any request's
+    # out_tokens — prefill-sampled first tokens included — is counted
+    # exactly once (requeue restarts regenerate tokens only AFTER folding,
+    # so folded prefixes never double-count)
+    assert eng.stats.tokens_out == sum(len(r.out_tokens) for r in reqs), \
+        (eng.stats.tokens_out, [len(r.out_tokens) for r in reqs])
     return eng
 
 

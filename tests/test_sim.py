@@ -33,6 +33,30 @@ def test_min_interactive_rate_70b():
     assert tt.tokens_per_s >= 3.0
 
 
+def test_host_dispatch_gap_pricing():
+    """The serving-loop dispatch-gap model: a synchronous loop pays every
+    host dispatch gap serially; the overlapped loop hides the gap behind
+    compute, so only max(0, gap - compute) can surface.  Defaults price
+    an ideal (zero-gap) host, leaving every historical number unchanged."""
+    cfg, flash = ARCHS["opt-6.7b"], CAMBRICON_LLM_S
+    base = decode_token_time(cfg, flash, seq_len=1000)
+    assert base.host_gap_s == 0.0
+    gap = 1e-3
+    sync = decode_token_time(cfg, flash, seq_len=1000,
+                             host_dispatch_s=gap, n_dispatches=2)
+    assert sync.total == pytest.approx(base.total + 2 * gap)
+    olap = decode_token_time(cfg, flash, seq_len=1000, host_dispatch_s=gap,
+                             n_dispatches=1, overlap_dispatch=True)
+    # decode compute for 6.7B dwarfs a 1ms dispatch gap: fully hidden
+    assert olap.total == pytest.approx(base.total)
+    assert olap.host_gap_s == 0.0
+    # a gap larger than the whole token's compute can't hide entirely
+    huge = decode_token_time(cfg, flash, seq_len=1000,
+                             host_dispatch_s=base.total + 0.5,
+                             n_dispatches=1, overlap_dispatch=True)
+    assert huge.total == pytest.approx(base.total + 0.5)
+
+
 def test_slicing_ablation_speedup():
     """Fig. 12: sliced reads 1.6-1.8x faster than unsliced (we accept >1.25x)."""
     for model in ("opt-6.7b", "llama2-7b"):
