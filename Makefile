@@ -2,7 +2,7 @@
 
 .PHONY: test test-fast test-slow test-families bench-serving \
 	bench-serving-smoke bench-serving-policy bench-serving-kvtier-mla \
-	bench-serving-router bench-serving-overlap
+	bench-serving-router bench-serving-overlap bench-serving-prefix
 
 # every family where supports_paged() is true — the serving conformance
 # matrix (test ids are fam_<family>, substring-safe: fam_moe != fam_mla_moe)
@@ -25,12 +25,14 @@ test-slow:
 # termination, page recycling, streaming terminals, preempt-resume AND
 # cross-replica slot-migration bit-identity — per paged family — plus the
 # overlapped-decode-loop bit-identity suite (fused dispatch vs sync loop)
+# and the prefix-cache conformance suite (warm-vs-cold bit-identity,
+# refcounted release, tiered spill/prefetch of shared pages, migration)
 test-families:
 	@set -e; for f in $(FAMILIES); do \
 		echo "=== conformance: $$f ==="; \
 		python -m pytest -x -q tests/test_serving.py \
 			tests/test_tiered_kv.py tests/test_router.py \
-			tests/test_overlap.py \
+			tests/test_overlap.py tests/test_prefix_cache.py \
 			-k "fam_$$f"; \
 	done
 
@@ -59,6 +61,15 @@ bench-serving-kvtier-mla:
 bench-serving-overlap:
 	PYTHONPATH=src python benchmarks/bench_serving.py --smoke \
 		--trace overlap
+
+# prefix caching on a multi-turn chat trace: warm engines (flat, tiered,
+# 2-replica session-affinity) vs a cold-cache run — 100% completion,
+# outputs bit-identical to cold on every variant, >= 2x TTFT p50 collapse
+# on hit turns; reports prefix-hit-rate, tokens reused, COW copies, and
+# the hit-vs-miss TTFT split
+bench-serving-prefix:
+	PYTHONPATH=src python benchmarks/bench_serving.py --smoke \
+		--trace prefix
 
 # multi-replica Router trace: Poisson over 2 replicas (least-loaded +
 # skewed-affinity routes, with cross-replica slot migration) vs 1

@@ -33,6 +33,18 @@ Three traces, all Poisson arrivals:
   dispatches per decode step drop from 2 (decode + sample) to 1 — and
   shows dispatches per decoded token.  ``--overlap`` additionally runs the
   admission trace's continuous engine overlapped.
+* ``prefix`` — the prefix-caching trace: multi-turn chat sessions (a shared
+  per-session system prompt plus history grown from each run's own outputs,
+  with an immediate "regenerate" of every turn) race four engines: ``cold``
+  (prefix caching off), ``warm`` (``prefix_cache=True``), ``warm-tiered``
+  (a hot pool sized below the working set, so idle shared pages spill to
+  flash and prefetch back on the next hit), and ``warm-2rep`` (two replicas
+  under ``session_affinity`` routing — the replica whose cache holds the
+  session's pages wins).  All variants must complete 100% with outputs
+  bit-identical to cold (greedy AND seed-pinned stochastic sessions), and
+  hit-turn TTFT p50 must improve >= 2x over the cold run — regenerates are
+  exact-prompt resume hits (zero prefill dispatches), follow-up turns are
+  partial page hits that only prefill the uncached suffix.
 * ``router`` — multi-replica serving through the Router/EngineCore split:
   ``--replicas N`` small replicas under least-loaded routing with
   cross-replica slot migration vs ONE N-wide replica with the same total
@@ -64,8 +76,8 @@ from repro.core.hw import CAMBRICON_LLM_S
 from repro.models import model as model_lib
 from repro.serving.engine import Request, ServingEngine
 from repro.serving.router import Router
-from repro.serving.scheduler import POLICIES, make_scheduler
-from repro.sim.llm_perf import kv_swap_overhead_s
+from repro.serving.scheduler import POLICIES, SamplingParams, make_scheduler
+from repro.sim.llm_perf import kv_swap_overhead_s, prefill_ttft_s
 
 # a small prompt-length menu keeps the per-shape jit retrace count bounded
 PROMPT_LENS = (4, 6, 8, 12)
@@ -531,6 +543,178 @@ def bench_router(cfg, params, args) -> list[dict]:
     return rows
 
 
+def make_prefix_sessions(cfg, args, n_turns: int = 3, user_len: int = 4):
+    """Static skeleton of the multi-turn chat trace: per-session system
+    prompts (the cacheable mass, page-aligned so full pages hit) and
+    per-turn user spans.  Histories are grown live from each run's OWN
+    outputs, so a variant's prompts depend only on its outputs — which the
+    bit-identity assertion pins to the cold run's."""
+    n_sessions = max(2, args.max_batch)
+    m = min(args.max_new, 4)
+    ps = args.page_size
+    # final turn must fit: sys + n_turns * (user + out) <= max_seq
+    sys_len = ((args.max_seq - n_turns * (user_len + m)) // ps) * ps
+    assert sys_len >= ps, "max_seq too small for the prefix trace"
+    rng = np.random.RandomState(args.seed + 5)
+    sessions = []
+    for s in range(n_sessions):
+        sessions.append({
+            "sid": f"sess-{s}",
+            "system": rng.randint(0, cfg.vocab_size, size=sys_len).tolist(),
+            "users": [rng.randint(0, cfg.vocab_size, size=user_len).tolist()
+                      for _ in range(n_turns)],
+            # odd sessions sample stochastically with a pinned seed — the
+            # resume replay must stay bit-identical under BOTH modes
+            "sampling": (None if s % 2 == 0 else
+                         SamplingParams(temperature=0.8, top_k=20,
+                                        seed=1000 + s)),
+        })
+    return sessions, m, n_turns, user_len
+
+
+def bench_prefix_variant(name: str, cfg, params, args, make_eng) -> dict:
+    """One pass over the chat trace: sessions interleave turn by turn (so a
+    session's idle pages feel other sessions' allocation pressure between
+    its own turns — the tiered variant spills and prefetches them), and
+    every turn is immediately regenerated (exact-prompt resubmission, the
+    resume-hit case)."""
+    eng = make_eng()
+    sessions, m, n_turns, _ = make_prefix_sessions(cfg, args)
+    history = {s["sid"]: list(s["system"]) for s in sessions}
+    recs: list[tuple[str, float]] = []   # (cold|hit, ttft_s)
+    outs: dict[int, list[int]] = {}
+    rid = 0
+    t0 = time.monotonic()
+    for t in range(n_turns):
+        for sess in sessions:
+            prompt = history[sess["sid"]] + sess["users"][t]
+            first_out = None
+            for kind in ("turn", "regen"):
+                req = Request(rid=rid, prompt=list(prompt),
+                              max_new_tokens=m, session=sess["sid"],
+                              sampling=sess["sampling"])
+                rid += 1
+                eng.submit(req)
+                while eng.has_work:
+                    eng.step()
+                assert req.done and not req.rejected, \
+                    f"{name}: request {req.rid} did not complete"
+                outs[req.rid] = list(req.out_tokens)
+                # a warm cache only ever misses each session's very first
+                # submission; every later turn shares pages with it
+                recs.append(("cold" if (t == 0 and kind == "turn")
+                             else "hit", req.ttft_s))
+                if kind == "turn":
+                    first_out = list(req.out_tokens)
+            history[sess["sid"]] = prompt + first_out
+    wall = time.monotonic() - t0
+    stats = eng.stats
+    if isinstance(stats, list):  # Router: sum the fleet's counters
+        agg = {k: sum(getattr(s, k) for s in stats)
+               for k in ("prefix_lookups", "prefix_hits", "prefix_hit_pages",
+                         "prefix_tokens_reused", "cow_copies",
+                         "kv_spill_pages", "kv_prefetch_pages")}
+    else:
+        agg = {k: getattr(stats, k)
+               for k in ("prefix_lookups", "prefix_hits", "prefix_hit_pages",
+                         "prefix_tokens_reused", "cow_copies",
+                         "kv_spill_pages", "kv_prefetch_pages")}
+    hit = sorted(t for k, t in recs if k == "hit")
+    return {
+        "variant": name, "wall_s": wall, "outs": outs,
+        "n_requests": rid, "completed_pct": 100.0,
+        "ttft_hit_p50": float(np.percentile(hit, 50)),
+        "ttft_hit_p99": float(np.percentile(hit, 99)),
+        **agg,
+    }
+
+
+def bench_prefix(cfg, params, args) -> list[dict]:
+    """Prefix caching: warm variants must be bit-identical to cold with
+    hit-turn TTFT collapsing >= 2x."""
+    from repro.serving.kv_cache import pages_needed
+    # the trace needs a system prompt with real prefill mass (the thing the
+    # cache elides) even under --smoke, so it floors max_seq independently
+    args = argparse.Namespace(**{**vars(args),
+                                 "max_seq": max(args.max_seq, 256)})
+    sessions, m, n_turns, user_len = make_prefix_sessions(cfg, args)
+    sys_len = len(sessions[0]["system"])
+    final_plen = sys_len + (n_turns - 1) * (user_len + m) + user_len
+    per_req = pages_needed(min(args.max_seq, final_plen + m), args.page_size)
+    # roomy pool for the untiered variants (every session's cache stays
+    # hot); the tiered pool is sized BELOW the combined working set so
+    # idle shared pages must spill to flash between a session's turns
+    roomy = 2 * len(sessions) * per_req
+    tight = per_req + 2
+    print(f"\n[prefix] arch={cfg.name} sessions={len(sessions)} "
+          f"turns={n_turns} (+1 regenerate each) sys_prompt={sys_len} tok "
+          f"tiered_pool={tight} pages (working set ~"
+          f"{len(sessions) * per_req})")
+
+    def mk(**kw):
+        base = dict(max_batch=args.max_batch, max_seq=args.max_seq,
+                    eos_id=-1, mode="continuous", page_size=args.page_size)
+        return lambda: ServingEngine(cfg, params, **{**base, **kw})
+
+    factories = {
+        "cold": mk(num_pages=roomy + 1),
+        "warm": mk(num_pages=roomy + 1, prefix_cache=True),
+        "warm-tiered": mk(num_pages=tight + 1, kv_tier="flash",
+                          prefix_cache=True),
+        "warm-2rep": lambda: Router.build(
+            cfg, params, replicas=2, policy="session_affinity",
+            max_batch=args.max_batch, max_seq=args.max_seq, eos_id=-1,
+            mode="continuous", page_size=args.page_size,
+            num_pages=roomy + 1, prefix_cache=True),
+    }
+    rows = []
+    for name, f in factories.items():
+        bench_prefix_variant(name, cfg, params, args, f)  # compile warmup
+        rows.append(bench_prefix_variant(name, cfg, params, args, f))
+    hdr = ("variant", "wall_s", "done%", "reqs", "hits", "hit_pg", "tok_re",
+           "cow", "spill", "fetch", "ttft_hit_p50", "ttft_hit_p99")
+    print(" ".join(f"{h:>12}" for h in hdr))
+    for r in rows:
+        print(f"{r['variant']:>12} {r['wall_s']:>12.2f} "
+              f"{r['completed_pct']:>12.1f} {r['n_requests']:>12d} "
+              f"{r['prefix_hits']:>12d} {r['prefix_hit_pages']:>12d} "
+              f"{r['prefix_tokens_reused']:>12d} {r['cow_copies']:>12d} "
+              f"{r['kv_spill_pages']:>12d} {r['kv_prefetch_pages']:>12d} "
+              f"{r['ttft_hit_p50']:>12.4f} {r['ttft_hit_p99']:>12.4f}")
+    cold = rows[0]
+    for r in rows[1:]:
+        # the whole point: reusing pages must never change a token — every
+        # warm variant (incl. tiered spill/prefetch and 2-replica affinity)
+        # replays the cold run bit for bit, greedy and stochastic sessions
+        assert r["outs"] == cold["outs"], \
+            f"{r['variant']} outputs diverge from the cold-cache run"
+        assert r["prefix_hits"] > 0, f"{r['variant']} never hit the cache"
+    warm = rows[1]
+    speedup = cold["ttft_hit_p50"] / max(warm["ttft_hit_p50"], 1e-9)
+    tiered = rows[2]
+    assert tiered["kv_spill_pages"] > 0 and tiered["kv_prefetch_pages"] > 0, \
+        "tiered prefix variant never exercised the flash tier"
+    hit_rate = warm["prefix_hits"] / max(warm["prefix_lookups"], 1)
+    print(f"\nprefix: 100% completed, all warm variants bit-identical to "
+          f"cold; hit rate {100 * hit_rate:.0f}% "
+          f"({warm['prefix_hits']}/{warm['prefix_lookups']}), "
+          f"{warm['prefix_tokens_reused']} prompt tokens served from cache, "
+          f"{warm['cow_copies']} copy-on-write page copies")
+    print(f"hit-turn TTFT p50 {cold['ttft_hit_p50'] * 1e3:.2f} ms (cold) -> "
+          f"{warm['ttft_hit_p50'] * 1e3:.2f} ms (warm): x{speedup:.1f}")
+    assert speedup >= 2.0, \
+        f"hit-turn TTFT p50 improved only x{speedup:.2f} (< 2x)"
+    # the channel model prices the same collapse: cached tokens drop their
+    # serialized NPU attention phases out of the prefill critical path
+    t_cold = prefill_ttft_s(cfg, CAMBRICON_LLM_S, final_plen)
+    t_warm = prefill_ttft_s(cfg, CAMBRICON_LLM_S, final_plen,
+                            cached_tokens=sys_len)
+    print(f"modeled TTFT ({final_plen}-token prompt, {sys_len} cached): "
+          f"{t_cold * 1e3:.2f} ms -> {t_warm * 1e3:.2f} ms "
+          f"(x{t_cold / t_warm:.1f})")
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
@@ -550,7 +734,7 @@ def main(argv=None):
                          "against ONE replica with the same total "
                          "slot+page budget)")
     ap.add_argument("--trace", choices=("admission", "overlap", "kvtier",
-                                        "policy", "router", "all"),
+                                        "policy", "prefix", "router", "all"),
                     default="all")
     ap.add_argument("--overlap", action="store_true",
                     help="run the admission trace's continuous engine with "
@@ -585,6 +769,8 @@ def main(argv=None):
         out["kvtier"] = bench_kvtier(cfg, params, args)
     if args.trace in ("policy", "all"):
         out["policy"] = bench_policy(cfg, params, args)
+    if args.trace in ("prefix", "all"):
+        out["prefix"] = bench_prefix(cfg, params, args)
     if args.trace in ("router", "all"):
         out["router"] = bench_router(cfg, params, args)
     return out

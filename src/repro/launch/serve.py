@@ -14,6 +14,17 @@ fused into ONE jitted dispatch per step, sampled tokens held on device and
 read back one step late, so step N+1 is enqueued before step N's token
 reaches the host; outputs stay bit-identical to the synchronous loop.
 
+``--prefix-cache`` turns on refcounted prefix caching in every replica:
+prefill-written KV pages are registered in a per-replica prefix index
+(sha256 chain over page-aligned token spans), a repeated prompt re-maps
+those shared pages instead of re-prefilling them (an exact repeat skips
+prefill dispatches entirely and replays the stored first-token logits),
+writes into shared pages copy-on-write, and released pages park idle in
+the index — spillable to the flash tier and prefetched back on the next
+hit.  Outputs stay bit-identical to a cold-cache run; under
+``--route session_affinity`` the replica whose cache holds the session's
+pages wins the routing decision.
+
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
       --requests 8 --max-new 16 --replicas 2 --route least_loaded \
       --policy edf --deadline 5.0 --chunk-prefill 8 \
@@ -72,6 +83,10 @@ def main():
                          "dispatch with one-step-delayed host readback — "
                          "1 jitted dispatch per decode step instead of 2, "
                          "bit-identical outputs")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="refcounted prefix caching: repeated prompts "
+                         "re-map shared KV pages instead of re-prefilling "
+                         "(copy-on-write on writes, bit-identical outputs)")
     ap.add_argument("--policy", default="fcfs", choices=sorted(POLICIES),
                     help="per-replica admission/preemption policy "
                          "(serving.scheduler)")
@@ -106,6 +121,7 @@ def main():
         migrate=not args.no_migrate, seed_base=args.seed,
         max_batch=args.max_batch, max_seq=args.max_seq, eos_id=-1,
         mode=args.mode, page_size=args.page_size, overlap=args.overlap,
+        prefix_cache=args.prefix_cache,
         scheduler=make_scheduler(args.policy,
                                  chunk_tokens=args.chunk_prefill or None))
     rng = jax.random.PRNGKey(42)

@@ -95,6 +95,28 @@ and decode numerics differ; only the flash tier preserves exact logits);
 benchmark compares against.  Both count ``EngineStats.pool_exhausted``
 instead of crashing the engine loop.
 
+Prefix caching (``prefix_cache=True``): finished requests leave their
+PREFILL-written KV pages behind in a content-addressed
+:class:`repro.serving.kv_cache.PrefixIndex` (sha256 rolling hash over
+page-aligned token spans), refcounted at the allocator.  Admission matches
+the longest cached prefix: an exact-prompt hit replays a stored "resume
+point" — shared full pages mapped into the block table (incref), a private
+copy-on-write copy of the partial tail page, the prefill's final logits
+(sampling replays from the stored bits) and, for hybrid, the post-prefill
+SSM checkpoint — admitting with ZERO prefill dispatches; a partial hit
+(families with chunked prefill) shares the cached pages and prefills only
+the uncached suffix through the chunk path, whose any-schedule bit-identity
+contract makes warm output bit-identical to a cold run.  Decode-written
+pages are never registered (prefill/decode numerics may differ off the
+flash tier — see the requeue caveat above — and registering them would
+poison the bit-identity oracle), which also means every write frontier sits
+strictly beyond the shared region: the ``_ensure_pages`` COW guard exists
+for safety, not for a hot path.  Idle (refcount-0) cached pages are
+reclaimed LRU under pool pressure, or — under ``kv_tier="flash"`` — spilled
+to the cold tier under ``("px", chain_key)`` and prefetched back on the
+next hit.  Migration snapshots carry each shared page's chain key so inject
+re-shares against the target's index (or re-registers the carried payload).
+
 Overlapped decode (``overlap=True``): the synchronous loop pays two jitted
 dispatches and one host sync per decode step (decode, then sample, then
 ``np.asarray`` on the tokens).  The overlapped loop fuses decode + per-
@@ -134,9 +156,9 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import model as model_lib
 from repro.serving import sampler
-from repro.serving.kv_cache import (OutOfPages, PageAllocator,
-                                    TieredPageAllocator, pages_needed,
-                                    prefill_bucket)
+from repro.serving.kv_cache import (OutOfPages, PageAllocator, PrefixIndex,
+                                    ResumeEntry, TieredPageAllocator,
+                                    pages_needed, prefill_bucket)
 from repro.serving.scheduler import (SamplingParams, Scheduler, SlotView,
                                      make_scheduler)
 
@@ -248,6 +270,12 @@ class SlotSnapshot:
     ssm: object            # checkpoint_slot_state payload (None if none)
     page_size: int
     family: str
+    # prefix-cache chain keys of the slot's SHARED pages ({page_idx: key},
+    # None when the source engine has no prefix cache): inject re-shares
+    # against the target's index when it already holds the key, or registers
+    # the carried payload — new fields go at the end, defaulted, so older
+    # snapshots keep deserializing
+    prefix_keys: Optional[dict] = None
 
     @property
     def n_pages(self) -> int:
@@ -395,6 +423,12 @@ class EngineStats:
     kv_prefetch_pages: int = 0
     kv_spill_bytes: float = 0.0
     kv_prefetch_bytes: float = 0.0
+    # prefix-cache accounting
+    prefix_lookups: int = 0    # admissions that consulted the index
+    prefix_hits: int = 0       # admissions served any cached prefix
+    prefix_hit_pages: int = 0  # shared pages mapped instead of re-prefilled
+    prefix_tokens_reused: int = 0  # prompt tokens whose prefill was skipped
+    cow_copies: int = 0        # private copies made of (tail) shared pages
     # per-request latency samples, appended at completion
     admission_wait_s: list = dataclasses.field(default_factory=list)
     ttft_s: list = dataclasses.field(default_factory=list)
@@ -426,6 +460,11 @@ class EngineStats:
         if self.migrated_out or self.migrated_in:
             s += (f" migrated out/in={self.migrated_out}"
                   f"/{self.migrated_in}")
+        if self.prefix_lookups:
+            s += (f" prefix hits={self.prefix_hits}/{self.prefix_lookups}"
+                  f" pages={self.prefix_hit_pages}"
+                  f" tokens={self.prefix_tokens_reused}"
+                  f" cow={self.cow_copies}")
         return s
 
 
@@ -446,7 +485,7 @@ class EngineCore:
                  kv_tier: str = "none", exhaust_policy: str = "requeue",
                  flash_pages: Optional[int] = None,
                  scheduler: "Scheduler | str | None" = None,
-                 overlap: bool = False):
+                 overlap: bool = False, prefix_cache: bool = False):
         if overlap and watchdog is not None:
             raise ValueError(
                 "overlap=True keeps one decode step in flight past the host "
@@ -466,6 +505,10 @@ class EngineCore:
             raise ValueError(f"exhaust_policy {exhaust_policy!r}")
         if kv_tier == "flash" and mode != "continuous":
             raise ValueError("kv_tier='flash' needs mode='continuous'")
+        if prefix_cache and mode != "continuous":
+            raise ValueError(
+                "prefix_cache=True needs mode='continuous' (the wave cache "
+                "has no page pool to share)")
         self.cfg = cfg
         self.params = params
         self.max_batch = max_batch
@@ -490,6 +533,7 @@ class EngineCore:
         self._events: list[RequestOutput] = []
         self._chunk_ok = (mode == "continuous"
                           and model_lib.supports_chunked_prefill(cfg))
+        self._px: Optional[PrefixIndex] = None  # set in the continuous branch
         if mode == "continuous":
             self.page_size = page_size
             self.pages_per_slot = pages_needed(max_seq, page_size)
@@ -515,6 +559,12 @@ class EngineCore:
                                                      flash_pages)
             else:
                 self.allocator = PageAllocator(self.num_pages)
+            # prefix cache: the content-addressed page index plus, per slot,
+            # {page_idx: chain key} of the pages it maps from the index
+            self._px = PrefixIndex(page_size) if prefix_cache else None
+            self.slot_shared: list[dict[int, bytes]] = [
+                {} for _ in range(max_batch)]
+            self._px_pin: set[bytes] = set()  # keys mid-acquire (shed shield)
             # per-slot page lists mirror the block table; a 0 entry marks a
             # page currently cold (spilled to the flash tier)
             self.slot_pages: list[list[int]] = [[] for _ in range(max_batch)]
@@ -644,7 +694,7 @@ class EngineCore:
             return True
         need = min(pages_needed(self._cache_len0(r), self.page_size)
                    for r in self.queue)
-        return need > self.allocator.available
+        return need > self.allocator.available + self._px_reclaimable
 
     def migration_candidate(self) -> Optional[tuple[int, int]]:
         """``(rid, n_pages)`` of the slot this replica would rather hand to
@@ -676,7 +726,14 @@ class EngineCore:
         return (self.mode == "continuous" and not self.page_starved
                 and self.n_free_slots > 0
                 and n_pages <= self.pages_per_slot
-                and self.allocator.available >= n_pages + 1)
+                and (self.allocator.available + self._px_reclaimable
+                     >= n_pages + 1))
+
+    @property
+    def _px_reclaimable(self) -> int:
+        """Idle (refcount-0) HOT prefix-cache pages — freeable on demand, so
+        pool-pressure predicates count them as available."""
+        return self._px.n_idle_hot if self._px is not None else 0
 
     # ------------------------------------------------------------------
     # command surface: snapshot / inject (cross-replica slot migration)
@@ -720,7 +777,9 @@ class EngineCore:
             pages=pages,
             ssm=(model_lib.checkpoint_slot_state(self.cache, i)
                  if self._has_state else None),
-            page_size=self.page_size, family=self.cfg.family)
+            page_size=self.page_size, family=self.cfg.family,
+            prefix_keys=(dict(self.slot_shared[i]) if self._px is not None
+                         else None))
         self._release_slot(i)
         req.n_migrated += 1
         self.stats.migrated_out += 1
@@ -746,10 +805,39 @@ class EngineCore:
         if not free:
             raise OutOfPages("no free slot to inject into")
         i = free[0]
-        pids = self._alloc_pages(snap.n_pages)
-        if snap.pages:
-            self._scatter_pages(pids, snap.pages)
-        self.slot_pages[i] = list(pids)
+        # re-share against the local prefix index where it already holds a
+        # carried chain key (equal keys imply bit-identical page contents —
+        # both replicas prefilled the same tokens with the same params), and
+        # deep-copy the rest; carried keys the index lacks REGISTER the fresh
+        # copy, so a slot move spreads the cache instead of privatizing it
+        shared_map = (dict(snap.prefix_keys or {})
+                      if self._px is not None else {})
+        reuse_idx = sorted(j for j, k in shared_map.items()
+                           if j < snap.n_pages
+                           and self._px.get(k) is not None)
+        acquired = self._px_acquire([shared_map[j] for j in reuse_idx])
+        fresh_idx = [j for j in range(snap.n_pages) if j not in set(reuse_idx)]
+        try:
+            fresh = self._alloc_pages(len(fresh_idx))
+        except OutOfPages:
+            for j in reuse_idx:
+                self._px_release_key(shared_map[j])
+            raise
+        if fresh_idx:
+            self._scatter_pages(fresh, [snap.pages[j] for j in fresh_idx])
+        pids = [0] * snap.n_pages
+        for j, pid in zip(reuse_idx, acquired):
+            pids[j] = pid
+        for j, pid in zip(fresh_idx, fresh):
+            pids[j] = pid
+        self.slot_shared[i] = {j: shared_map[j] for j in reuse_idx}
+        if self._px is not None:
+            for j, key in shared_map.items():
+                if (j not in self.slot_shared[i] and j < snap.n_pages
+                        and self._px.get(key) is None):
+                    self._px.insert(key, pids[j])
+                    self.slot_shared[i][j] = key
+        self.slot_pages[i] = pids
         self.block[i, :snap.n_pages] = pids
         self.slot_len[i] = snap.slot_len
         self.cache["lens"] = self.cache["lens"].at[i].set(snap.slot_len)
@@ -925,6 +1013,16 @@ class EngineCore:
         past its capacity go back on the eviction queue instead of
         half-spilling (which would leak their hot pids)."""
         room = self.allocator.flash_available
+        if room is not None and len(items) > room and self._px is not None:
+            # cold cached-prefix payloads are droppable (nobody references
+            # them — a re-miss just re-prefills): shed LRU ones for room
+            for key in self._px.cold_idle_keys(len(items) - room):
+                if key in self._px_pin:
+                    continue  # mid-acquire, about to prefetch
+                self.allocator.drop_slot(
+                    lambda k, key=key: k == ("px", key))
+                self._px.drop(key)
+            room = self.allocator.flash_available
         if room is not None and len(items) > room:
             for key, pid in items[room:]:
                 self.allocator.mark_evictable(key, pid)
@@ -939,9 +1037,14 @@ class EngineCore:
         ks, vs = _jit_swap_out(self.cache, self._bucket_pids(pids))
         for j, (key, _pid) in enumerate(items):
             self.allocator.store(key, _LazyPagePayload(ks[:, j], vs[:, j]))
-            slot, page_idx = key
-            self.block[slot, page_idx] = 0
-            self.slot_pages[slot][page_idx] = 0
+            if key[0] == "px":
+                # an idle cached-prefix page going cold: no block-table row
+                # to clear, just the index residency flip
+                self._px.mark_cold(key[1])
+            else:
+                slot, page_idx = key
+                self.block[slot, page_idx] = 0
+                self.slot_pages[slot][page_idx] = 0
         self.allocator.free(pids)
         self.stats.kv_spill_pages += len(pids)
         self.stats.kv_spill_bytes += len(pids) * self.kv_page_bytes
@@ -985,7 +1088,10 @@ class EngineCore:
         if self._has_state:
             self._ssm_ckpt[i] = model_lib.checkpoint_slot_state(self.cache, i)
         for page_idx, pid in enumerate(self.slot_pages[i]):
-            if pid != 0:
+            # shared prefix pages stay pinned hot while mapped (other slots
+            # may be reading them); they become spill candidates only when
+            # their refcount parks at 0 in the index idle-LRU
+            if pid != 0 and page_idx not in self.slot_shared[i]:
                 self.allocator.mark_evictable((i, page_idx), pid)
 
     def _resume_suspended(self) -> None:
@@ -1031,7 +1137,279 @@ class EngineCore:
     def _alloc_pages(self, n: int, avoid: frozenset = frozenset()) -> list[int]:
         if self.kv_tier == "flash" and self.allocator.available < n:
             self._make_room(n, avoid)
+        if self._px is not None and self.allocator.available < n:
+            # LRU-reclaim idle cached-prefix pages: live slots always beat
+            # the cache (a reclaimed prefix just re-prefills on its next
+            # miss; resume entries citing it die lazily at lookup)
+            self._px_reclaim(n - self.allocator.available)
         return self.allocator.alloc(n)
+
+    def _px_reclaim(self, n: int) -> None:
+        ents = self._px.pop_idle_hot(n)
+        if not ents:
+            return
+        if self.kv_tier == "flash":
+            keys = {("px", key) for key, _pid in ents}
+            self.allocator.unmark_slot(lambda k: k in keys)
+        self.allocator.free([pid for _key, pid in ents])
+
+    # ------------------------------------------------------------------
+    # prefix cache: lookup / acquire / release / register / COW
+    # ------------------------------------------------------------------
+    def _key_tokens(self, req: Request) -> list[int]:
+        """Token sequence the prefix hash chains over — one entry per cache
+        position (``_cache_len0`` long).  vlm prepends a ``-1`` sentinel per
+        vision token: the vision embeds are config-constant here, so equal
+        sentinels imply equal page contents for vlm exactly like real
+        tokens do for the text families."""
+        if self.cfg.family == "vlm":
+            return [-1] * self.cfg.n_vision_tokens + list(req.prompt)
+        return list(req.prompt)
+
+    def _px_lookup(self, req: Request, len0: int):
+        """Match ``req`` against the index: ``("resume", entry)`` for an
+        exact-prompt resume point (all five families — admission replays the
+        stored bits with zero prefill dispatches), ``("partial", keys)`` for
+        a leading run of cached full pages (chunk-capable families only —
+        the uncached suffix must prefill through the chunk path), or None.
+        A resume entry citing any reclaimed page entry dies lazily here."""
+        if self._px is None:
+            return None
+        self.stats.prefix_lookups += 1
+        kt = self._key_tokens(req)
+        rkey = self._px.resume_key(kt)
+        rent = self._px.get_resume(rkey)
+        if rent is not None:
+            if all(self._px.get(k) is not None for k in rent.page_keys):
+                return ("resume", rent)
+            self._px.drop_resume(rkey)
+        if not self._chunk_ok:
+            return None
+        keys = self._px.page_keys(kt)
+        # cap so at least one token remains to prefill: the suffix chunk is
+        # what produces the first-token logits on a partial hit
+        n = min(self._px.match(keys), (len0 - 1) // self.page_size)
+        if n >= 1:
+            return ("partial", keys[:n])
+        return None
+
+    def _px_acquire(self, keys: list[bytes],
+                    avoid: frozenset = frozenset()) -> list[int]:
+        """Map cached page entries into a slot: incref hot ones (an idle
+        entry leaves the idle-LRU and withdraws its spill candidacy),
+        prefetch cold ones onto fresh pids.  Returns pids in ``keys`` order;
+        OutOfPages rolls the partial acquisition back completely."""
+        done: list[bytes] = []
+        cold: list[bytes] = []
+        for k in keys:
+            ent = self._px.get(k)
+            if ent.cold:
+                cold.append(k)
+                continue
+            if self.allocator.incref(ent.pid) == 1:
+                self._px.unpark(k)
+                if self.kv_tier == "flash":
+                    self.allocator.unmark_slot(
+                        lambda kk, k=k: kk == ("px", k))
+            done.append(k)
+        if cold:
+            # pop payloads BEFORE allocating: _make_room may shed cold
+            # prefix payloads for flash room, and _px_pin shields entries
+            # mid-acquire from that shed
+            payloads = [self.allocator.fetch(("px", k)) for k in cold]
+            self._px_pin.update(cold)
+            try:
+                npids = self._alloc_pages(len(cold), avoid=avoid)
+            except OutOfPages:
+                for k, p in zip(cold, payloads):
+                    self.allocator.store(("px", k), p)
+                for k in done:
+                    self._px_release_key(k)
+                raise
+            finally:
+                self._px_pin.difference_update(cold)
+            self._scatter_pages(npids, payloads)
+            for k, pid in zip(cold, npids):
+                self._px.mark_hot(k, pid)
+            self.stats.kv_prefetch_pages += len(cold)
+            self.stats.kv_prefetch_bytes += len(cold) * self.kv_page_bytes
+        return [self._px.get(k).pid for k in keys]
+
+    def _px_release_key(self, key: bytes) -> None:
+        """Drop one slot's reference; at 0 the page parks on the idle-LRU
+        (cached for the next hit) and becomes a spill candidate."""
+        ent = self._px.get(key)
+        if self.allocator.decref(ent.pid) == 0:
+            self._px.park(key)
+            if self.kv_tier == "flash":
+                self.allocator.mark_evictable(("px", key), ent.pid)
+
+    def _px_register_prompt(self, i: int, req: Request, len0: int,
+                            logits_row) -> None:
+        """Register slot ``i``'s freshly PREFILL-written prompt pages and an
+        exact-prompt resume point.  Called right after one-shot prefill and
+        at chunked-prefill completion — never for decode-written pages
+        (their bits may differ from a prefill of the same tokens, which
+        would break warm-vs-cold bit-identity on reuse)."""
+        kt = self._key_tokens(req)
+        keys = self._px.page_keys(kt)
+        shared = self.slot_shared[i]
+        for j, key in enumerate(keys):
+            if j in shared:
+                continue  # a partial hit already maps the index's page here
+            if self._px.get(key) is None:
+                self._px.insert(key, self.slot_pages[i][j])
+                shared[j] = key
+            # else: an identical page is registered under another pid (e.g.
+            # twin prompts admitted in one group); ours stays exclusive
+        rkey = self._px.resume_key(kt)
+        if self._px.peek_resume(rkey) is None:
+            tail_len = len0 - len(keys) * self.page_size
+            tail = (self._gather_pages([self.slot_pages[i][len(keys)]])[0]
+                    if tail_len else None)
+            self._px.put_resume(rkey, ResumeEntry(
+                page_keys=keys, tail=tail, tail_len=tail_len,
+                logits=np.asarray(logits_row).copy(), length=len0,
+                ssm=(model_lib.checkpoint_slot_state(self.cache, i)
+                     if self._has_state else None)))
+
+    def _px_cow(self, i: int, pj: int) -> None:
+        """Copy-on-write: give slot ``i`` a private copy of its shared page
+        ``pj`` before a write dirties it.  Registration only ever covers
+        full prefill-written pages strictly behind every write frontier, so
+        this is a safety net rather than a hot path — but any future flow
+        that writes into the shared span goes through here, never through
+        an in-place write."""
+        key = self.slot_shared[i][pj]
+        payload = self._gather_pages([self.slot_pages[i][pj]])[0]
+        pid = self._alloc_pages(
+            1, avoid=frozenset({i}) | self._resumed_now)[0]
+        self._scatter_pages([pid], [payload])
+        del self.slot_shared[i][pj]
+        self._px_release_key(key)
+        self.slot_pages[i][pj] = pid
+        self.block[i, pj] = pid
+        self.stats.cow_copies += 1
+
+    def _admit_resume_hit(self, i: int, req: Request, len0: int,
+                          rent: ResumeEntry, now: float) -> None:
+        """Admit an exact-prompt hit with ZERO prefill dispatches: map the
+        shared full pages, scatter the stored tail-page copy onto a private
+        page (the COW copy of the partially filled shared span), restore
+        recurrent state, and sample the first token from the stored prefill
+        logits — bit-identical to a cold admission for any sampling params
+        because every consumed bit is the cold run's bit."""
+        avoid = frozenset(self._resumed_now)
+        shared = self._px_acquire(rent.page_keys, avoid=avoid)
+        tail: list[int] = []
+        if rent.tail_len:
+            try:
+                tail = self._alloc_pages(1, avoid=avoid)
+            except OutOfPages:
+                for k in rent.page_keys:
+                    self._px_release_key(k)
+                raise
+            self._scatter_pages(tail, [rent.tail])
+            self.stats.cow_copies += 1
+        pids = shared + tail
+        self.slot_pages[i] = pids
+        self.block[i, :len(pids)] = pids
+        self.slot_shared[i] = dict(enumerate(rent.page_keys))
+        self.slot_len[i] = rent.length
+        self.cache["lens"] = self.cache["lens"].at[i].set(rent.length)
+        self.prefilling[i] = False
+        self.prefill_pos[i] = 0
+        if self._has_state and rent.ssm is not None:
+            self.cache = model_lib.restore_slot_state(self.cache, i,
+                                                      rent.ssm)
+        self.slots[i] = req
+        self.stats.admitted += 1
+        self.stats.prefix_hits += 1
+        self.stats.prefix_hit_pages += len(shared)
+        self.stats.prefix_tokens_reused += rent.length
+        tok = int(self._sample_rows(rent.logits[None], [(0, req)])[0])
+        t1 = time.monotonic()
+        if req.t_admit == 0.0:  # restarts keep their first-admit times
+            req.t_admit = now
+            req.t_first_token = t1
+        req.out_tokens.append(tok)
+        self.stats.tokens_out += 1
+        self.last_np[i] = tok
+        reason = self._finish_reason_for(req, tok, rent.length)
+        if reason is not None:
+            self._finish(i, req, reason, token=tok)
+        else:
+            self._emit(req, tok)
+
+    def _admit_partial_hit(self, i: int, req: Request, len0: int,
+                           keys: list[bytes], now: float) -> None:
+        """Admit a partial hit: map the cached leading pages, allocate the
+        rest, and enter the chunked-prefill path at the cached length — the
+        suffix prefills through ``_prefill_chunks`` whose any-schedule
+        bit-identity contract keeps warm output equal to a cold one-shot."""
+        avoid = frozenset(self._resumed_now)
+        cached = len(keys) * self.page_size
+        shared = self._px_acquire(keys, avoid=avoid)
+        try:
+            fresh = self._alloc_pages(
+                pages_needed(len0, self.page_size) - len(keys), avoid=avoid)
+        except OutOfPages:
+            for k in keys:
+                self._px_release_key(k)
+            raise
+        pids = shared + fresh
+        self.slot_pages[i] = pids
+        self.block[i, :len(pids)] = pids
+        self.slot_shared[i] = dict(enumerate(keys))
+        self.slots[i] = req
+        self.prefilling[i] = True
+        self.prefill_pos[i] = cached
+        self.slot_len[i] = cached
+        self.cache["lens"] = self.cache["lens"].at[i].set(cached)
+        if req.t_admit == 0.0:
+            req.t_admit = now
+        self.stats.admitted += 1
+        self.stats.prefix_hits += 1
+        self.stats.prefix_hit_pages += len(keys)
+        self.stats.prefix_tokens_reused += cached
+
+    def prefix_hit_estimate(self, req: Request) -> int:
+        """Prompt tokens this replica's prefix cache could serve ``req``
+        without prefilling — the router folds this into ``least_loaded``
+        scoring and ``session_affinity`` placement.  LRU-neutral (scoring N
+        replicas must not perturb any cache's eviction order)."""
+        if self.mode != "continuous" or self._px is None:
+            return 0
+        kt = self._key_tokens(req)
+        rent = self._px.peek_resume(self._px.resume_key(kt))
+        if rent is not None and all(
+                self._px.get(k) is not None for k in rent.page_keys):
+            return rent.length
+        if not self._chunk_ok:
+            return 0
+        n = min(self._px.match(self._px.page_keys(kt)),
+                (self._cache_len0(req) - 1) // self.page_size)
+        return n * self.page_size
+
+    def clear_prefix_cache(self) -> int:
+        """Drop every IDLE cached prefix page (hot and cold) and all resume
+        entries; pages still mapped by live slots stay shared.  Returns the
+        number of page entries dropped — after a full drain this returns
+        the whole index and the pool recycles completely (tests pin that)."""
+        if self._px is None:
+            return 0
+        ents = self._px.pop_idle_hot(1 << 30)
+        if ents:
+            if self.kv_tier == "flash":
+                keys = {("px", k) for k, _pid in ents}
+                self.allocator.unmark_slot(lambda kk: kk in keys)
+            self.allocator.free([pid for _k, pid in ents])
+        cold = self._px.cold_idle_keys(1 << 30)
+        for key in cold:
+            self.allocator.drop_slot(lambda k, key=key: k == ("px", key))
+            self._px.drop(key)
+        self._px.clear_resume()
+        return len(ents) + len(cold)
 
     # ------------------------------------------------------------------
     # continuous admission: prefill requests into free slots (one batched
@@ -1045,7 +1423,16 @@ class EngineCore:
         self._slot_epoch[i] += 1
         self._inflight[i] = 0
         self.slots[i] = None
-        self.allocator.free([p for p in self.slot_pages[i] if p != 0])
+        # shared pages decref (at 0 they park on the index idle-LRU, cached
+        # for the next hit); exclusively owned pages free outright — the
+        # allocator's refcount guard makes a misclassified shared page a
+        # loud ValueError, never a silent corruption
+        own = [p for j, p in enumerate(self.slot_pages[i])
+               if p != 0 and j not in self.slot_shared[i]]
+        self.allocator.free(own)
+        for j in self.slot_shared[i]:
+            self._px_release_key(self.slot_shared[i][j])
+        self.slot_shared[i] = {}
         if self.kv_tier == "flash":
             self.allocator.drop_slot(lambda k, i=i: k[0] == i)
             if self.suspended[i]:
@@ -1140,7 +1527,18 @@ class EngineCore:
                 continue
             i = free[0]
             len0 = self._cache_len0(req)
+            hit = self._px_lookup(req, len0)
             try:
+                if hit is not None and hit[0] == "resume":
+                    self._admit_resume_hit(i, req, len0, hit[1], now)
+                    free.pop(0)
+                    self.queue.remove(req)
+                    continue
+                if hit is not None and hit[0] == "partial":
+                    self._admit_partial_hit(i, req, len0, hit[1], now)
+                    free.pop(0)
+                    self.queue.remove(req)
+                    continue
                 pids = self._alloc_pages(
                     pages_needed(len0, self.page_size),
                     avoid=frozenset(self._resumed_now))
@@ -1202,8 +1600,9 @@ class EngineCore:
         self.stats.admitted += len(group)
         toks_out = self._sample_rows(
             logits, [(row, req) for row, (i, req, len0) in enumerate(group)])
+        logits_np = np.asarray(logits) if self._px is not None else None
         t1 = time.monotonic()
-        for (i, req, len0), tok in zip(group, toks_out):
+        for row, ((i, req, len0), tok) in enumerate(zip(group, toks_out)):
             tok = int(tok)
             if req.t_admit == 0.0:  # restarts keep their first-admit times
                 req.t_admit = now
@@ -1213,6 +1612,10 @@ class EngineCore:
             self.last_np[i] = tok
             self.slot_len[i] = len0
             self.slots[i] = req
+            if self._px is not None:
+                # register BEFORE any finish below: the pages must outlive
+                # the slot as cached entries even for one-token requests
+                self._px_register_prompt(i, req, len0, logits_np[row])
             reason = self._finish_reason_for(req, tok, len0)
             if reason is not None:
                 self._finish(i, req, reason, token=tok)
@@ -1256,6 +1659,9 @@ class EngineCore:
             self.slot_len[i] = pos
             if pos >= len0:
                 self.prefilling[i] = False
+                if self._px is not None:
+                    self._px_register_prompt(i, req, len0,
+                                             np.asarray(logits))
                 tok = int(self._sample_rows(
                     jnp.asarray(logits)[None], [(0, req)])[0])
                 if req.t_first_token == 0.0:
@@ -1280,9 +1686,13 @@ class EngineCore:
             # the next write position counts the in-flight token the host
             # has not drained yet (slot_len is the DRAINED length)
             pj = (self.slot_len[i] + self._inflight[i]) // self.page_size
-            if pj < len(self.slot_pages[i]):
-                continue
             try:
+                if pj < len(self.slot_pages[i]):
+                    if self._px is not None and pj in self.slot_shared[i]:
+                        # the next decode write lands in a SHARED page:
+                        # copy-on-write before it can dirty other readers
+                        self._px_cow(i, pj)
+                    continue
                 pid = self._alloc_pages(
                     1, avoid=frozenset({i}) | self._resumed_now)[0]
             except OutOfPages:

@@ -12,11 +12,17 @@ Routing policies (``policy=``):
 
 * ``round_robin`` — cycle through replicas; the stateless baseline.
 * ``least_loaded`` — send to the replica with the smallest
-  (queue depth + active slots), breaking ties toward the most free pages;
-  the sensible default under heterogeneous request sizes.
-* ``session_affinity`` — hash ``Request.session`` to a replica so one
-  conversation's requests land where its context already lives
-  (``session=None`` falls back to round robin).
+  (queue depth + active slots), discounted by the fraction of the prompt
+  the replica's prefix cache could serve without prefilling
+  (``EngineCore.prefix_hit_estimate``, 0 when prefix caching is off) and
+  breaking ties toward the most free pages; the sensible default under
+  heterogeneous request sizes.
+* ``session_affinity`` — the replica whose prefix cache already holds the
+  most of this request's prompt wins outright (that is where the session's
+  pages physically live); with no cached pages anywhere — or prefix
+  caching off — it falls back to hashing ``Request.session`` so a
+  conversation keeps landing on one replica (``session=None`` falls back
+  to round robin).
 
 Request ids must be GLOBALLY unique across the fleet — the router
 enforces it at submit, and :class:`repro.serving.client.ServingClient`
@@ -114,12 +120,25 @@ class Router:
     # ------------------------------------------------------------------
     def _pick(self, req: Request) -> EngineCore:
         if self.policy == "session_affinity" and req.session is not None:
+            # "the session's replica" is wherever its KV pages actually
+            # live: the largest cached-prefix estimate wins (max is stable,
+            # so equal estimates keep the lowest replica — deterministic)
+            hits = [c.prefix_hit_estimate(req) for c in self.cores]
+            if max(hits) > 0:
+                return self.cores[hits.index(max(hits))]
+            # no replica holds anything (cold session / prefix off):
             # deterministic across processes (python's str hash is salted)
             h = zlib.crc32(str(req.session).encode())
             return self.cores[h % len(self.cores)]
         if self.policy == "least_loaded":
+            # discount load by the prompt fraction already cached: a busier
+            # replica that can skip the whole prefill is often the cheaper
+            # place to land (hit fraction is in [0, 1], so it acts as a
+            # tie-shader between integer load levels, not an override)
+            len0 = max(1, len(req.prompt))
             return min(self.cores,
-                       key=lambda c: (c.queue_depth + c.n_active,
+                       key=lambda c: (c.queue_depth + c.n_active
+                                      - c.prefix_hit_estimate(req) / len0,
                                       -c.free_pages))
         core = self.cores[self._rr % len(self.cores)]
         self._rr += 1

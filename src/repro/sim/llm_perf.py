@@ -166,6 +166,29 @@ def kv_swap_overhead_s(cfg: ModelConfig, flash: FlashSpec,
     return kv.total - base.total
 
 
+def prefill_ttft_s(cfg: ModelConfig, flash: FlashSpec,
+                   prompt_len: int, cached_tokens: int = 0,
+                   **kw) -> float:
+    """Time-to-first-token of a prefill with ``cached_tokens`` of the prompt
+    already served by the KV prefix cache.
+
+    The weight stream is token-parallel (one pass over the layers covers
+    every new position's GEMVs — the whole suffix batches into it), while
+    the per-position NPU attention/SSM phases serialize; cached positions
+    participate only as attention context, which the ``seq_len``-sized
+    phases already price.  So a prefix hit removes ``cached_tokens`` of the
+    serialized NPU phases — TTFT decreases monotonically in the cached
+    length and collapses to a single decode-step time on a full hit, which
+    is exactly what the serving engine's zero-dispatch resume admission
+    does.  ``**kw`` forwards to :func:`decode_token_time`."""
+    if prompt_len < 1:
+        raise ValueError(f"prompt_len must be >= 1, got {prompt_len}")
+    cached = max(0, min(int(cached_tokens), prompt_len - 1))
+    n_new = prompt_len - cached
+    t = decode_token_time(cfg, flash, seq_len=prompt_len, **kw)
+    return t.total + (n_new - 1) * t.npu_phase_time
+
+
 def family_kv_page_bytes(cfg: ModelConfig, page_size: int,
                          bytes_per_elem: float = 2.0) -> float:
     """Bytes one evicted KV page moves, per family — the MLA family spills

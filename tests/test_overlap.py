@@ -12,6 +12,7 @@ The dispatch accounting is pinned too: the synchronous loop pays 2 jitted
 dispatches per decode step, the overlapped loop exactly 1.
 """
 
+import numpy as np
 import pytest
 
 from repro.serving.core import EngineCore, Request
@@ -127,6 +128,56 @@ def test_overlap_eos_lag_identity():
                      max_batch=2, max_seq=32, page_size=4)
     _assert_identical(*pair)
     assert any(r.finish_reason == "eos" for r in pair[1][0])
+
+
+def _px_page_bits(eng):
+    """Gathered (k, v) payloads of every HOT cached prefix page, by key."""
+    return {key: eng._gather_pages([ent.pid])[0]
+            for key, ent in eng._px._pages.items() if not ent.cold}
+
+
+def test_overlap_prefix_eos_lag_never_dirties_shared_pages():
+    """Prefix cache x overlap: the speculative extra step a slot runs past
+    a lagged eos is discarded — it must never COW-dirty (or write in place
+    into) a shared page that OUTLIVES the discarded epoch.  Oracle: token
+    streams match the sync engine's, the surviving cached page payloads are
+    bit-equal between the sync and overlapped engines, and a warm
+    resubmission on the overlapped engine still replays the cold stream."""
+    cfg, params = _dense()
+    prompt = [3, 5, 7, 2, 9, 4, 6, 8, 1]  # 2 full pages + a tail at ps=4
+    probe = EngineCore(cfg, params, eos_id=-1, max_batch=2, max_seq=48,
+                       page_size=4)
+    pr = Request(rid=0, prompt=list(prompt), max_new_tokens=10)
+    probe.add_request(pr)
+    probe.run()
+    eos = pr.out_tokens[len(pr.out_tokens) // 2]
+
+    engines, runs = [], []
+    for overlap in (False, True):
+        eng = EngineCore(cfg, params, eos_id=eos, overlap=overlap,
+                         max_batch=2, max_seq=48, page_size=4,
+                         prefix_cache=True)
+        rs = [Request(rid=i, prompt=list(prompt), max_new_tokens=10)
+              for i in range(3)]
+        for r in rs:
+            eng.add_request(r)
+        eng.run()
+        engines.append(eng)
+        runs.append(rs)
+    for a, b in zip(*runs):
+        assert a.out_tokens == b.out_tokens, (a.out_tokens, b.out_tokens)
+        assert a.finish_reason == b.finish_reason
+    assert any(r.finish_reason == "eos" for r in runs[1])
+    assert engines[1].stats.prefix_hits >= 1   # warm admissions happened
+    bits_s, bits_o = (_px_page_bits(e) for e in engines)
+    assert bits_s.keys() == bits_o.keys()
+    for key in bits_s:
+        for x, y in zip(bits_s[key], bits_o[key]):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    again = Request(rid=9, prompt=list(prompt), max_new_tokens=10)
+    engines[1].add_request(again)
+    engines[1].run()
+    assert again.out_tokens == runs[0][0].out_tokens
 
 
 def test_overlap_requeue_identity():

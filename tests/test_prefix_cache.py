@@ -1,0 +1,412 @@
+"""Prefix caching conformance: refcounted copy-on-write KV page sharing.
+
+The load-bearing oracle is bit-identity against a cold cache: admitting a
+prompt through the prefix cache — an exact-prompt resume hit (zero prefill
+dispatches, the stored prefill logits replayed), a partial page-level hit
+(only the uncached suffix prefills, via the chunk path), tiered
+spill/prefetch of idle shared pages, cross-replica migration of a slot
+mapping shared pages — must emit exactly the tokens of a
+``prefix_cache=False`` run, greedy AND seed-pinned stochastic.  That holds
+because only PREFILL-written pages are registered (decode-written KV bits
+may differ, the requeue caveat), keyed by a sha256 chain over page-aligned
+token spans, so equal keys imply bit-identical page contents.
+
+Cross-family: every test parametrized over ``fam`` runs for all five paged
+families (``make test-families`` / ``pytest -k fam_<family>``).
+"""
+
+import numpy as np
+import pytest
+
+from repro.serving.core import EngineCore, Request
+from repro.serving.kv_cache import PrefixIndex, ResumeEntry
+from repro.serving.router import Router
+from repro.serving.scheduler import SamplingParams
+
+from conftest import load_family
+
+ENG_KW = dict(max_batch=2, max_seq=64, eos_id=-1, page_size=8)
+PROMPT = list(range(1, 19))  # 18 tokens: 2 full pages + a 2-token tail
+
+
+def _len0(cfg, prompt=None):
+    """Cache length of a prompt: vlm prepends its vision tokens (the keyed
+    sequence does too, so page counts shift with the family)."""
+    n = len(prompt if prompt is not None else PROMPT)
+    return n + (cfg.n_vision_tokens if cfg.family == "vlm" else 0)
+
+
+def _sp(stochastic, seed=7):
+    return (SamplingParams(temperature=0.8, top_k=20, seed=seed)
+            if stochastic else None)
+
+
+def _cold_outputs(cfg, params, prompts, max_new=6, sampling=None, **kw):
+    """Reference outputs with prefix caching OFF (requests independent)."""
+    eng = EngineCore(cfg, params, **{**ENG_KW, **kw})
+    outs = []
+    for i, p in enumerate(prompts):
+        r = Request(rid=i, prompt=list(p), max_new_tokens=max_new,
+                    sampling=sampling)
+        eng.add_request(r)
+        eng.run()
+        outs.append(list(r.out_tokens))
+    return outs
+
+
+# ---------------------------------------------------------------- index
+def test_prefix_index_chain_and_resume_keys():
+    """Chain keys commit to the whole prefix behind them; resume keys are
+    domain-separated from page keys and sensitive to the tail."""
+    px = PrefixIndex(page_size=4)
+    a = px.page_keys([1, 2, 3, 4, 5, 6, 7, 8, 9])
+    b = px.page_keys([1, 2, 3, 4, 5, 6, 7, 8])
+    assert len(a) == 2 and a[:2] == b[:2]  # shared spans, shared keys
+    c = px.page_keys([9, 2, 3, 4, 5, 6, 7, 8])
+    assert c[0] != a[0] and c[1] != a[1]   # first-span change cascades
+    r1 = px.resume_key([1, 2, 3, 4, 5, 6, 7, 8, 9])
+    r2 = px.resume_key([1, 2, 3, 4, 5, 6, 7, 8])
+    assert r1 != r2 and r2 not in (a + c)  # aligned prompt != page key
+    assert px.match(a) == 0
+    px.insert(a[0], 5)
+    assert px.match(a) == 1 and px.match(c) == 0
+
+
+def test_prefix_index_idle_lru_and_resume_cap():
+    px = PrefixIndex(page_size=4, resume_cap=2)
+    keys = px.page_keys(list(range(16)))
+    for j, k in enumerate(keys):
+        px.insert(k, j + 1)
+    px.park(keys[0])
+    px.park(keys[1])
+    px.unpark(keys[0])          # reacquired: off the idle LRU
+    assert px.n_idle == 1 and px.n_idle_hot == 1
+    px.mark_cold(keys[1])
+    assert px.n_idle_hot == 0 and px.cold_idle_keys(5) == [keys[1]]
+    assert px.pop_idle_hot(5) == []          # cold entries never pop hot
+    px.mark_hot(keys[1], 9)
+    assert px.n_idle == 0                    # mark_hot unparks
+    px.park(keys[2])
+    assert px.pop_idle_hot(5) == [(keys[2], 3)]
+    assert px.get(keys[2]) is None           # popped entries leave the index
+    for i in range(3):                       # LRU cap evicts the oldest
+        px.put_resume(bytes([i]) * 32, ResumeEntry(
+            page_keys=[], tail=None, tail_len=0,
+            logits=np.zeros(4), length=1))
+    assert px.n_resume == 2
+    assert px.peek_resume(bytes([0]) * 32) is None
+
+
+# ------------------------------------------------------- exact-prompt hits
+@pytest.mark.parametrize("sampling", ["greedy", "stochastic"])
+def test_resume_hit_bit_identity(fam, sampling):
+    """Conformance (every paged family): resubmitting an identical prompt
+    is admitted with ZERO prefill dispatches — the first token replays the
+    stored prefill logits — and the output stream is exactly the cold-cache
+    run's, greedy and seed-pinned stochastic."""
+    family, cfg, params = fam
+    sp = _sp(sampling == "stochastic")
+    cold = _cold_outputs(cfg, params, [PROMPT, PROMPT], sampling=sp)
+    assert cold[0] == cold[1]  # sanity: pinned seeds replay the stream
+
+    eng = EngineCore(cfg, params, prefix_cache=True, **ENG_KW)
+    r0 = Request(rid=0, prompt=list(PROMPT), max_new_tokens=6, sampling=sp)
+    eng.add_request(r0)
+    eng.run()
+    assert r0.out_tokens == cold[0]
+    prefills, chunks = eng.stats.prefills, eng.stats.prefill_chunks
+    r1 = Request(rid=1, prompt=list(PROMPT), max_new_tokens=6, sampling=sp)
+    eng.add_request(r1)
+    eng.run()
+    assert r1.out_tokens == cold[1]
+    assert eng.stats.prefills == prefills          # dispatch counters pinned
+    assert eng.stats.prefill_chunks == chunks
+    assert eng.stats.prefix_hits == 1 and eng.stats.prefix_lookups == 2
+    len0 = _len0(cfg)
+    assert eng.stats.prefix_hit_pages == len0 // 8  # every full page shared
+    assert eng.stats.prefix_tokens_reused == len0
+    # the private tail-page copy of the resume admission is the COW copy
+    assert eng.stats.cow_copies == (1 if len0 % 8 else 0)
+
+
+def test_resume_hit_one_token_request(fam):
+    """A request finishing ON its prefill-sampled token (max_new=1) must
+    still leave a usable cache behind — registration precedes finish."""
+    family, cfg, params = fam
+    cold = _cold_outputs(cfg, params, [PROMPT, PROMPT], max_new=1)
+    eng = EngineCore(cfg, params, prefix_cache=True, **ENG_KW)
+    reqs = [Request(rid=i, prompt=list(PROMPT), max_new_tokens=1)
+            for i in range(2)]
+    eng.add_request(reqs[0])
+    eng.run()
+    eng.add_request(reqs[1])
+    eng.run()
+    assert [list(r.out_tokens) for r in reqs] == cold
+    assert eng.stats.prefix_hits == 1
+
+
+# ------------------------------------------------------- partial-page hits
+def test_partial_hit_prefills_only_the_suffix(fam):
+    """A different continuation of a cached prefix re-maps the shared full
+    pages and prefills only the suffix (dense/moe, the chunk-capable
+    families — the others take a clean miss); outputs match cold either
+    way."""
+    family, cfg, params = fam
+    pfx = list(range(1, 17))            # 2 full pages
+    a, b = pfx + [20, 21], pfx + [30, 31, 32, 33]
+    cold = _cold_outputs(cfg, params, [a, b])
+
+    eng = EngineCore(cfg, params, prefix_cache=True, **ENG_KW)
+    ra = Request(rid=0, prompt=list(a), max_new_tokens=6)
+    eng.add_request(ra)
+    eng.run()
+    prefills = eng.stats.prefills
+    rb = Request(rid=1, prompt=list(b), max_new_tokens=6)
+    eng.add_request(rb)
+    eng.run()
+    assert [list(ra.out_tokens), list(rb.out_tokens)] == cold
+    if eng._chunk_ok:  # dense/moe: suffix went through the chunk path
+        assert eng.stats.prefix_hits == 1
+        assert eng.stats.prefix_hit_pages == 2
+        assert eng.stats.prefix_tokens_reused == 16
+        assert eng.stats.prefills == prefills      # no group prefill
+        assert eng.stats.prefill_chunks > 0
+    else:
+        assert eng.stats.prefix_hits == 0
+
+
+def test_partial_hit_page_aligned_prompt_keeps_a_suffix_token():
+    """A fully page-aligned cached prompt still prefills its LAST token (the
+    suffix produces the first-token logits) — the hit is capped one page
+    short rather than admitting a zero-length prefill."""
+    cfg, params = load_family("dense")
+    aligned = list(range(1, 17))        # exactly 2 pages
+    cold = _cold_outputs(cfg, params, [aligned, aligned + [5]])
+    eng = EngineCore(cfg, params, prefix_cache=True, **ENG_KW)
+    r0 = Request(rid=0, prompt=list(aligned), max_new_tokens=6)
+    eng.add_request(r0)
+    eng.run()
+    eng.clear_prefix_cache()
+    # re-register only the PAGE entries (drop the resume shortcut) so the
+    # aligned resubmission exercises the partial-hit cap
+    r1 = Request(rid=1, prompt=list(aligned), max_new_tokens=6)
+    eng.add_request(r1)
+    eng.run()
+    eng._px.clear_resume()
+    r2 = Request(rid=2, prompt=list(aligned), max_new_tokens=6)
+    eng.add_request(r2)
+    eng.run()
+    assert list(r0.out_tokens) == list(r1.out_tokens) == cold[0]
+    assert list(r2.out_tokens) == cold[0]
+    assert eng.stats.prefix_hit_pages >= 1         # capped at 1 of 2 pages
+    r3 = Request(rid=3, prompt=aligned + [5], max_new_tokens=6)
+    eng.add_request(r3)
+    eng.run()
+    assert list(r3.out_tokens) == cold[1]
+
+
+# -------------------------------------------------- release / reclamation
+def test_refcounted_release_parks_and_reclaims(fam):
+    """Finished slots decref shared pages instead of freeing them: the
+    cached full pages stay allocated (idle), are counted reclaimable for
+    admission headroom, and ``clear_prefix_cache`` returns them to the
+    pool."""
+    family, cfg, params = fam
+    eng = EngineCore(cfg, params, prefix_cache=True, **ENG_KW)
+    pool = eng.num_pages - 1
+    n_full = _len0(cfg) // 8                       # the cached full pages
+    r = Request(rid=0, prompt=list(PROMPT), max_new_tokens=6)
+    eng.add_request(r)
+    eng.run()
+    assert eng.allocator.available == pool - n_full  # idle cached pages
+    assert eng._px_reclaimable == n_full
+    # admission headroom counts idle cached pages as free-on-demand
+    assert eng.allocator.available + eng._px_reclaimable == pool
+    assert eng.can_accept(eng.pages_per_slot)
+    assert eng.clear_prefix_cache() == n_full
+    assert eng.allocator.available == pool         # fully recycled
+    assert eng.stats.prefix_hits == 0
+    # cache cleared: the next identical prompt is a miss, then hits again
+    r1 = Request(rid=1, prompt=list(PROMPT), max_new_tokens=6)
+    eng.add_request(r1)
+    eng.run()
+    assert list(r1.out_tokens) == list(r.out_tokens)
+    assert eng.stats.prefix_hits == 0 and eng.stats.prefix_lookups == 2
+
+
+def test_idle_cached_pages_reclaimed_under_pressure():
+    """A pool full of idle cached pages must not starve admission: the
+    engine reclaims LRU idle entries (frees their pids) when a new request
+    needs the room."""
+    cfg, params = load_family("dense")
+    eng = EngineCore(cfg, params, prefix_cache=True, max_batch=2, max_seq=64,
+                     eos_id=-1, page_size=8, num_pages=7)  # 6 usable pages
+    prompts = [[10 + i] * 18 for i in range(3)]  # 2 cached pages each
+    cold = _cold_outputs(cfg, params, prompts)
+    reqs = [Request(rid=i, prompt=list(p), max_new_tokens=6)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        eng.add_request(r)
+        eng.run()
+    assert [list(r.out_tokens) for r in reqs] == cold
+    assert all(not r.rejected for r in reqs)
+    # the pool (6 pages) cannot hold 3 x 2 idle + 3 active: reclamation ran
+    assert eng.allocator.available + eng._px_reclaimable == eng.num_pages - 1
+
+
+def test_wave_mode_rejects_prefix_cache():
+    cfg, params = load_family("dense")
+    with pytest.raises(ValueError, match="prefix"):
+        EngineCore(cfg, params, mode="wave", prefix_cache=True,
+                   max_batch=2, max_seq=32, eos_id=-1)
+
+
+# ------------------------------------------------------------ tiered pool
+def test_tiered_spill_prefetch_shared_pages(fam):
+    """Conformance (every paged family): idle shared pages spill to the
+    flash tier under pressure and prefetch back on the next hit —
+    evicted once, prefetched once, outputs bit-identical to cold."""
+    family, cfg, params = fam
+    fillers = [[30 + i] * 18 for i in range(3)]
+    cold = _cold_outputs(cfg, params, [PROMPT] + fillers + [PROMPT])
+
+    # hot pool = one request's worst-case demand + 2: each finished
+    # request's idle cached pages crowd the next admission into spilling
+    per_req = -(-min(64, _len0(cfg) + 6) // 8)
+    eng = EngineCore(cfg, params, prefix_cache=True, kv_tier="flash",
+                     max_batch=2, max_seq=64, eos_id=-1, page_size=8,
+                     num_pages=per_req + 3)
+    reqs = [Request(rid=i, prompt=list(p), max_new_tokens=6)
+            for i, p in enumerate([PROMPT] + fillers + [PROMPT])]
+    for r in reqs:
+        eng.add_request(r)
+        eng.run()
+    assert [list(r.out_tokens) for r in reqs] == cold
+    s = eng.stats
+    assert s.kv_spill_pages > 0 and s.kv_prefetch_pages > 0
+    assert s.prefix_hits >= 1                      # the resubmitted PROMPT
+    # the resubmission hit pages that had gone cold in between
+    assert s.prefix_hit_pages >= 2
+
+
+# ------------------------------------------------------------- migration
+def test_migration_carries_shared_pages(fam):
+    """Conformance (every paged family): a slot mapping shared pages
+    snapshots and injects bit-identically; the carried chain keys seed the
+    target replica's index, so the SAME prompt then hits on the target."""
+    family, cfg, params = fam
+    solo = _cold_outputs(cfg, params, [PROMPT, PROMPT], max_new=8)
+
+    a = EngineCore(cfg, params, prefix_cache=True, **ENG_KW)
+    b = EngineCore(cfg, params, prefix_cache=True, **ENG_KW)
+    warm = Request(rid=0, prompt=list(PROMPT), max_new_tokens=8)
+    a.add_request(warm)
+    a.run()                                        # populate a's cache
+    mig = Request(rid=1, prompt=list(PROMPT), max_new_tokens=8)
+    a.add_request(mig)
+    for _ in range(3):                             # genuinely mid-decode
+        a.step()
+    assert 0 < len(mig.out_tokens) < 8
+    snap = a.snapshot_slot(1)
+    assert snap.prefix_keys                        # shared pages annotated
+    b.inject_slot(snap)
+    while b.has_work:
+        b.step()
+    assert list(mig.out_tokens) == solo[0]
+    assert len(b._px) >= 2                         # keys registered on b
+    # the carried cache is live on b: an identical prompt hits there
+    r2 = Request(rid=2, prompt=list(PROMPT), max_new_tokens=8)
+    b.add_request(r2)
+    b.run()
+    assert list(r2.out_tokens) == solo[1]
+    if b._chunk_ok:
+        assert b.stats.prefix_hits >= 1
+    # a's pool: only its own idle cached pages remain
+    assert a.allocator.available == a.num_pages - 1 - a._px_reclaimable
+
+
+def test_migration_reshares_on_cache_holding_target():
+    """Injecting into a replica whose index already holds the carried keys
+    re-SHARES its pages (increfs) instead of deep-copying them."""
+    cfg, params = load_family("dense")
+    a = EngineCore(cfg, params, prefix_cache=True, **ENG_KW)
+    b = EngineCore(cfg, params, prefix_cache=True, **ENG_KW)
+    for eng in (a, b):                             # both caches warm
+        r = Request(rid=0, prompt=list(PROMPT), max_new_tokens=8)
+        eng.add_request(r)
+        eng.run()
+    avail_b = b.allocator.available
+    mig = Request(rid=1, prompt=list(PROMPT), max_new_tokens=8)
+    a.add_request(mig)
+    for _ in range(3):
+        a.step()
+    snap = a.snapshot_slot(1)
+    shared_pages = len(snap.prefix_keys)
+    total_pages = len(snap.pages)
+    assert shared_pages == 2
+    b.inject_slot(snap)
+    # the 2 shared pages were re-SHARED (increfed on b's copies), not
+    # re-allocated: only the exclusive pages cost b fresh pool pages
+    assert avail_b - b.allocator.available == total_pages - shared_pages
+    for ent in b._px._pages.values():
+        assert b.allocator.refcount(ent.pid) == 1  # idle 0 -> mapped 1
+    while b.has_work:
+        b.step()
+    solo = _cold_outputs(cfg, params, [PROMPT], max_new=8)[0]
+    assert list(mig.out_tokens) == solo
+
+
+# ---------------------------------------------------------------- routing
+def test_session_affinity_follows_the_cache():
+    """The replica whose prefix cache holds the session's pages wins the
+    routing decision, beating the cold-session hash fallback."""
+    import zlib
+    cfg, params = load_family("dense")
+    rt = Router.build(cfg, params, replicas=2, policy="session_affinity",
+                      prefix_cache=True, **ENG_KW)
+    # a session id whose hash picks replica 1 — but the session's pages
+    # will live on replica 0, and the cache must override the hash
+    sid = next(s for s in (f"s{i}" for i in range(64))
+               if zlib.crc32(s.encode()) % 2 == 1)
+    warm = Request(rid=0, prompt=list(PROMPT), max_new_tokens=4)
+    rt.cores[0].add_request(warm)                  # pages land on replica 0
+    while rt.cores[0].has_work:
+        rt.cores[0].step()
+    req = Request(rid=1, prompt=list(PROMPT), max_new_tokens=4, session=sid)
+    assert rt.cores[0].prefix_hit_estimate(req) > 0
+    assert rt.cores[1].prefix_hit_estimate(req) == 0
+    assert rt.submit(req) is rt.cores[0]           # cache beats the hash
+    cold = Request(rid=2, prompt=[7, 8, 9], max_new_tokens=4, session=sid)
+    assert rt.submit(cold) is rt.cores[1]          # nothing cached: hash
+
+
+def test_least_loaded_discounts_cached_prefix():
+    """At equal queue load, least_loaded prefers the replica that can skip
+    the prefill (the hit estimate acts as a tie-shader)."""
+    cfg, params = load_family("dense")
+    rt = Router.build(cfg, params, replicas=2, policy="least_loaded",
+                      prefix_cache=True, **ENG_KW)
+    warm = Request(rid=0, prompt=list(PROMPT), max_new_tokens=4)
+    rt.cores[1].add_request(warm)                  # warm replica 1 directly
+    while rt.cores[1].has_work:
+        rt.cores[1].step()
+    req = Request(rid=1, prompt=list(PROMPT), max_new_tokens=4)
+    assert rt.submit(req) is rt.cores[1]           # loads equal, cache wins
+
+
+def test_prefix_hit_estimate_is_lru_neutral():
+    """Router scoring probes must not perturb resume-entry LRU order."""
+    cfg, params = load_family("dense")
+    eng = EngineCore(cfg, params, prefix_cache=True, **ENG_KW)
+    r = Request(rid=0, prompt=list(PROMPT), max_new_tokens=4)
+    eng.add_request(r)
+    eng.run()
+    probe = Request(rid=9, prompt=list(PROMPT), max_new_tokens=4)
+    est = eng.prefix_hit_estimate(probe)
+    assert est > 0
+    order = list(eng._px._resume)
+    for _ in range(3):
+        assert eng.prefix_hit_estimate(probe) == est
+    assert list(eng._px._resume) == order
+    assert eng.prefix_hit_estimate(
+        Request(rid=10, prompt=[99, 98], max_new_tokens=4)) == 0

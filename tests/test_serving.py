@@ -86,6 +86,55 @@ def test_page_allocator_double_free_raises():
     assert sorted(a.alloc(5)) == list(range(1, 6))
 
 
+def test_page_allocator_refcount_guards():
+    """Prefix sharing extends the double-free guard to refcounts: a page
+    with sharers can never be freed, refcounts never go negative, and
+    refcount 0 means idle-but-allocated — NOT free."""
+    a = PageAllocator(6)
+    p, q = a.alloc(2)
+    assert a.refcount(p) == 1
+    assert a.incref(p) == 2
+    with pytest.raises(ValueError):
+        a.free([p])  # a sharer remains
+    with pytest.raises(ValueError):
+        a.free([q, p])  # batch validation catches it before any free
+    assert a.available == 3  # the failed batch freed nothing
+    assert a.decref(p) == 1
+    assert a.decref(p) == 0  # idle cached: still allocated
+    with pytest.raises(ValueError):
+        a.decref(p)  # below zero
+    assert a.available == 3
+    a.free([p])  # refcount 0 is freeable (reclaiming an idle cached page)
+    with pytest.raises(ValueError):
+        a.refcount(p)  # free pages have no refcount
+    with pytest.raises(ValueError):
+        a.incref(99)  # never allocated
+    a.free([q])
+    assert a.available == 5
+
+
+def test_prefix_full_hit_skips_prefill_dispatches(fam):
+    """Satellite of the prefix-cache PR, pinned per family: an exact-prompt
+    hit must admit with ZERO prefill dispatches — neither the group-prefill
+    nor the chunked-prefill counter may move — and still emit the cold
+    run's exact tokens."""
+    family, cfg, params = fam
+    prompt = list(range(1, 19))
+    eng = ServingEngine(cfg, params, max_batch=2, max_seq=48, eos_id=-1,
+                        page_size=8, prefix_cache=True)
+    r0 = Request(rid=0, prompt=list(prompt), max_new_tokens=4)
+    eng.submit(r0)
+    eng.run()
+    prefills, chunks = eng.stats.prefills, eng.stats.prefill_chunks
+    r1 = Request(rid=1, prompt=list(prompt), max_new_tokens=4)
+    eng.submit(r1)
+    eng.run()
+    assert eng.stats.prefills == prefills
+    assert eng.stats.prefill_chunks == chunks
+    assert r1.out_tokens == r0.out_tokens
+    assert eng.stats.prefix_hits == 1 and eng.stats.prefix_tokens_reused > 0
+
+
 def test_page_math_helpers():
     assert pages_needed(1, 16) == 1 and pages_needed(16, 16) == 1
     assert pages_needed(17, 16) == 2

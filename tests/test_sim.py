@@ -9,7 +9,8 @@ from repro.core.schedule import ChannelWorkload, Policy
 from repro.core import tiling
 from repro.sim import baselines
 from repro.sim.engine import simulate_channel
-from repro.sim.llm_perf import decode_token_time, flash_only_token_time
+from repro.sim.llm_perf import decode_token_time, flash_only_token_time, \
+    prefill_ttft_s
 
 
 # --- paper Fig. 9 end-to-end numbers (tok/s), tolerance ±20% --------------
@@ -55,6 +56,28 @@ def test_host_dispatch_gap_pricing():
                              host_dispatch_s=base.total + 0.5,
                              n_dispatches=1, overlap_dispatch=True)
     assert huge.total == pytest.approx(base.total + 0.5)
+
+
+def test_prefill_ttft_prefix_cache_pricing():
+    """TTFT model for prefix-cached prefill: monotone non-increasing in the
+    cached token count, a full hit collapses to one decode-step time (the
+    engine's zero-dispatch resume admission), and the cached count clamps
+    to the prompt (at least one position must always prefill)."""
+    cfg, flash = ARCHS["opt-6.7b"], CAMBRICON_LLM_S
+    plen = 256
+    ts = [prefill_ttft_s(cfg, flash, plen, cached_tokens=c)
+          for c in (0, 64, 128, 255)]
+    assert all(a > b for a, b in zip(ts, ts[1:]))  # every page cached helps
+    # full hit == one token's time; over-reporting the cache clamps to it
+    one = decode_token_time(cfg, flash, seq_len=plen).total
+    assert ts[-1] == pytest.approx(one)
+    assert prefill_ttft_s(cfg, flash, plen, cached_tokens=10_000) == ts[-1]
+    assert prefill_ttft_s(cfg, flash, plen, cached_tokens=-5) == ts[0]
+    # the cold-vs-hit gap is exactly the serialized per-position NPU phases
+    t = decode_token_time(cfg, flash, seq_len=plen)
+    assert ts[0] == pytest.approx(one + (plen - 1) * t.npu_phase_time)
+    with pytest.raises(ValueError):
+        prefill_ttft_s(cfg, flash, 0)
 
 
 def test_slicing_ablation_speedup():

@@ -158,6 +158,94 @@ def test_tiered_allocator_invariants_property():
     check()
 
 
+def test_tiered_refcount_shared_cold_property():
+    """Prefix-sharing invariants under random alloc/incref/decref/free/
+    spill/prefetch sequences: refcounts track the model exactly, a page
+    with sharers never frees (the guard raises), only refcount-0 pages ever
+    spill, and NO page is simultaneously free, shared, and cold — the
+    satellite property of the prefix-cache PR."""
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_fallback import given, settings, strategies as st
+
+    @given(st.integers(4, 24), st.lists(st.integers(0, 29), max_size=60))
+    @settings(max_examples=40, deadline=None)
+    def check(num_pages, ops):
+        a = TieredPageAllocator(num_pages)
+        refs: dict = {}       # key -> model refcount (hot pages only)
+        hot: dict = {}        # key -> pid
+        cold: set = set()
+        next_key = 0
+        for op in ops:
+            r = op % 6
+            if r == 0:  # alloc: refcount 1 by contract
+                if a.available >= 1:
+                    hot[next_key] = a.alloc(1)[0]
+                    refs[next_key] = 1
+                    next_key += 1
+            elif r == 1:  # incref a hot page (a slot maps the shared page)
+                if hot:
+                    k = sorted(hot)[op % len(hot)]
+                    assert a.incref(hot[k]) == refs[k] + 1
+                    refs[k] += 1
+            elif r == 2:  # decref (slot released; 0 = idle cached)
+                cands = [k for k in hot if refs[k] > 0]
+                if cands:
+                    k = cands[op % len(cands)]
+                    assert a.decref(hot[k]) == refs[k] - 1
+                    refs[k] -= 1
+                elif hot:  # every refcount is 0: below-zero must raise
+                    k = sorted(hot)[op % len(hot)]
+                    with pytest.raises(ValueError):
+                        a.decref(hot[k])
+            elif r == 3:  # free: legal at refcount <= 1, a guard above
+                if hot:
+                    k = sorted(hot)[op % len(hot)]
+                    if refs[k] > 1:
+                        with pytest.raises(ValueError):
+                            a.free([hot[k]])  # sharers remain: must raise
+                    else:
+                        a.free([hot.pop(k)])
+                        del refs[k]
+            elif r == 4:  # spill: ONLY idle (refcount-0) pages may go cold
+                cands = [k for k in hot if refs[k] == 0]
+                if cands:
+                    k = cands[op % len(cands)]
+                    a.store(("px", k), ("payload", k))
+                    a.free([hot.pop(k)])
+                    del refs[k]
+                    cold.add(k)
+            else:  # prefetch a cold page back hot (idle until increfed)
+                if cold and a.available >= 1:
+                    k = sorted(cold)[op % len(cold)]
+                    assert a.fetch(("px", k)) == ("payload", k)
+                    cold.discard(k)
+                    hot[k] = a.alloc(1)[0]
+                    refs[k] = 1
+                    a.decref(hot[k])  # the engine's acquire-then-park dance
+                    refs[k] = 0
+            # --- invariants, every step ---
+            for k, pid in hot.items():
+                assert a.refcount(pid) == refs[k]
+            shared = {k for k in hot if refs[k] > 0}
+            # no page is simultaneously free, shared, and cold: hot pids
+            # are allocated (refcount() did not raise above), shared keys
+            # are hot by construction, and the two stores never overlap
+            assert not (shared & cold)
+            assert not ({("px", k) for k in hot} & set(a._cold))
+            assert a.available + len(hot) == num_pages - 1
+            assert a.cold_count == len(cold)
+        for k in list(hot):  # drain: shared pages decref first, then free
+            while refs[k] > 1:
+                refs[k] = a.decref(hot[k])
+            a.free([hot.pop(k)])
+        a.drop_slot(lambda key: True)
+        assert a.available == num_pages - 1 and a.cold_count == 0
+
+    check()
+
+
 # ------------------------------------------------------------ model layer
 def test_swap_roundtrip_decode_bit_identical(smollm):
     """Decode logits after spilling a slot's pages and prefetching them back
