@@ -1,8 +1,9 @@
 # Convenience targets; CI runs the same commands (.github/workflows/ci.yml).
 
-.PHONY: test test-fast test-slow test-families bench-serving \
-	bench-serving-smoke bench-serving-policy bench-serving-kvtier-mla \
-	bench-serving-router bench-serving-overlap bench-serving-prefix
+.PHONY: test test-fast test-slow test-families test-fleet \
+	test-fleet-socket bench-serving bench-serving-smoke \
+	bench-serving-policy bench-serving-kvtier-mla bench-serving-router \
+	bench-serving-overlap bench-serving-prefix bench-serving-fleet
 
 # every family where supports_paged() is true — the serving conformance
 # matrix (test ids are fam_<family>, substring-safe: fam_moe != fam_mla_moe)
@@ -33,8 +34,20 @@ test-families:
 		python -m pytest -x -q tests/test_serving.py \
 			tests/test_tiered_kv.py tests/test_router.py \
 			tests/test_overlap.py tests/test_prefix_cache.py \
+			tests/test_fleet.py \
 			-k "fam_$$f"; \
 	done
+
+# fleet serving over the loopback transport: wire-codec/framing adversity,
+# per-family snapshot byte round-trips, and kill-mid-decode failover with
+# bit-identical recovered streams (everything except the subprocess tests)
+test-fleet:
+	python -m pytest -x -q tests/test_fleet.py -k "not sock"
+
+# nightly chaos tier: real subprocess workers over TCP, one SIGKILLed
+# mid-decode — 100% completion, streams bit-identical to an undisturbed run
+test-fleet-socket:
+	python -m pytest -x -q tests/test_fleet.py -k sock
 
 bench-serving:
 	PYTHONPATH=src python benchmarks/bench_serving.py
@@ -79,3 +92,12 @@ bench-serving-prefix:
 bench-serving-router:
 	PYTHONPATH=src python benchmarks/bench_serving.py --smoke \
 		--trace router --replicas 2
+
+# fleet failover trace: N workers behind the fleet transport, one killed
+# once ~40% of the trace's tokens are out — 100% completion, every stream
+# bit-identical to an undisturbed single-engine run; reports failover
+# recovery latency and tokens replayed (--transport socket for real
+# subprocess workers)
+bench-serving-fleet:
+	PYTHONPATH=src python benchmarks/bench_serving.py --smoke \
+		--trace fleet --workers 2 --spares 1

@@ -54,6 +54,14 @@ Three traces, all Poisson arrivals:
   bit-identical — the N-replica fleet should hold the single-replica
   latency profile despite the partitioned KV pools).
 
+* ``fleet`` — the failover trace (serving/fleet/): N workers behind the
+  fleet transport (``--transport loopback`` in-process behind the wire
+  codec, ``socket`` real subprocesses), one worker killed once ~40% of
+  the trace's tokens have been delivered.  The fleet must complete 100%
+  of the requests with every stream bit-identical to an undisturbed
+  single-engine run (greedy AND seed-pinned stochastic); the report
+  prices the failover: recovery latency and tokens replayed.
+
 Run:  PYTHONPATH=src python benchmarks/bench_serving.py \
           --arch smollm-360m --requests 12 --rate 4 --max-batch 4
       PYTHONPATH=src python benchmarks/bench_serving.py --smoke
@@ -715,6 +723,115 @@ def bench_prefix(cfg, params, args) -> list[dict]:
     return rows
 
 
+def bench_fleet(cfg, params, args) -> list[dict]:
+    """The fleet failover trace: N workers behind the fleet transport,
+    one of them killed mid-trace.  The fleet must complete 100% of the
+    requests with every output stream bit-identical to an undisturbed
+    single-engine run (greedy AND seed-pinned stochastic); the report
+    prices the failover — recovery latency and tokens replayed."""
+    import os as _os
+    import signal as _signal
+
+    from repro.serving.fleet.router import FleetRouter
+
+    def mk_reqs():
+        base = make_requests(args.requests, cfg, args.max_new, args.seed)
+        # odd rids go stochastic with pinned seeds: failover replay must
+        # hold bit-identity for sampled streams too
+        return [Request(rid=r.rid, prompt=list(r.prompt),
+                        max_new_tokens=r.max_new_tokens,
+                        sampling=None if r.rid % 2 == 0 else SamplingParams(
+                            temperature=0.8, top_k=20, seed=1000 + r.rid))
+                for r in base]
+
+    print(f"[fleet] arch={cfg.name} requests={args.requests} "
+          f"workers={args.workers} spares={args.spares} "
+          f"transport={args.transport}")
+    _warm(cfg, params, args)
+
+    # reference: ONE undisturbed in-process engine (per-request streams
+    # are batch-composition-invariant, so this is the oracle)
+    solo_reqs = mk_reqs()
+    solo = ServingEngine(cfg, params, max_batch=args.max_batch,
+                         max_seq=args.max_seq, eos_id=-1,
+                         page_size=args.page_size)
+    for r in solo_reqs:
+        solo.submit(r)
+    t0 = time.monotonic()
+    solo.run()
+    solo_wall = time.monotonic() - t0
+    ref = {r.rid: list(r.out_tokens) for r in solo_reqs}
+
+    if args.transport == "socket":
+        fl = FleetRouter.build_socket(
+            args.arch, workers=args.workers, spares=args.spares,
+            checkpoint_every=4, migrate=False, reduced=bool(args.reduced),
+            max_batch=args.max_batch, max_seq=args.max_seq,
+            page_size=args.page_size, eos_id=-1)
+    else:
+        fl = FleetRouter.build_loopback(
+            cfg, params, workers=args.workers, spares=args.spares,
+            checkpoint_every=4, migrate=False, max_batch=args.max_batch,
+            max_seq=args.max_seq, eos_id=-1, page_size=args.page_size)
+    reqs = mk_reqs()
+    arrivals = poisson_arrivals(args.requests, args.rate, args.seed)
+    total_expected = sum(r.max_new_tokens for r in reqs)
+    t0 = time.monotonic()
+    i = 0
+    killed = False
+    while True:
+        now = time.monotonic() - t0
+        while i < len(reqs) and arrivals[i] <= now:
+            fl.submit(reqs[i])
+            i += 1
+        fl.step()
+        delivered = sum(len(r.out_tokens) for r in reqs)
+        if not killed and delivered >= 0.4 * total_expected:
+            w = fl.workers[0]
+            if args.transport == "socket":
+                _os.kill(w.transport.pid, _signal.SIGKILL)
+            else:
+                w.transport.kill()
+            killed = True
+        if not fl.has_work:
+            if i >= len(reqs):
+                break
+            time.sleep(max(0.0, min(0.001,
+                                    arrivals[i] - (time.monotonic() - t0))))
+    wall = time.monotonic() - t0
+    assert killed, "trace finished before the scripted kill fired"
+    assert all(r.done for r in reqs), \
+        f"lost requests: {[r.rid for r in reqs if not r.done]}"
+    for r in reqs:
+        assert list(r.out_tokens) == ref[r.rid], \
+            f"rid {r.rid} diverged after failover"
+    tokens = sum(len(r.out_tokens) for r in reqs)
+    recovery = float(np.median(fl.recovery_s)) if fl.recovery_s else 0.0
+    rows = [{
+        "transport": args.transport,
+        "workers": args.workers,
+        "wall_s": wall,
+        "solo_wall_s": solo_wall,
+        "tokens": tokens,
+        "tok_per_s": tokens / wall,
+        "workers_lost": fl.fleet.workers_lost,
+        "failovers": fl.fleet.failovers,
+        "requests_replayed": fl.fleet.requests_replayed,
+        "tokens_replayed": fl.fleet.tokens_replayed,
+        "recovery_s": recovery,
+    }]
+    print(f"  completed 100% ({len(reqs)} requests, {tokens} tokens), "
+          f"all streams bit-identical to the undisturbed run")
+    print(f"  wall {wall:.1f}s (solo {solo_wall:.1f}s)  "
+          f"failovers={fl.fleet.failovers} "
+          f"requests_replayed={fl.fleet.requests_replayed} "
+          f"tokens_replayed={fl.fleet.tokens_replayed} "
+          f"recovery={recovery * 1e3:.0f} ms")
+    print(fl.summary())
+    fl.close()
+    return rows
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
@@ -733,8 +850,17 @@ def main(argv=None):
                     help="replica count for the router trace (raced "
                          "against ONE replica with the same total "
                          "slot+page budget)")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="fleet trace: workers behind the fleet transport")
+    ap.add_argument("--spares", type=int, default=1,
+                    help="fleet trace: hot spares promoted on failover")
+    ap.add_argument("--transport", default="loopback",
+                    choices=("loopback", "socket"),
+                    help="fleet trace transport (socket = real subprocess "
+                         "workers, SIGKILLed mid-trace)")
     ap.add_argument("--trace", choices=("admission", "overlap", "kvtier",
-                                        "policy", "prefix", "router", "all"),
+                                        "policy", "prefix", "router",
+                                        "fleet", "all"),
                     default="all")
     ap.add_argument("--overlap", action="store_true",
                     help="run the admission trace's continuous engine with "
@@ -773,6 +899,8 @@ def main(argv=None):
         out["prefix"] = bench_prefix(cfg, params, args)
     if args.trace in ("router", "all"):
         out["router"] = bench_router(cfg, params, args)
+    if args.trace in ("fleet", "all"):
+        out["fleet"] = bench_fleet(cfg, params, args)
     return out
 
 

@@ -38,7 +38,9 @@ def save_checkpoint(ckpt_dir: str, step: int, tree, extra: dict | None = None,
         for i, l in enumerate(leaves):
             a = np.asarray(l)
             if a.dtype.name == "bfloat16":  # npz has no native bf16
-                a = a.view(np.uint16)
+                # contiguity first: a strided bf16 view (e.g. a sliced KV
+                # page payload) reinterprets to garbage under .view
+                a = np.ascontiguousarray(a).view(np.uint16)
             arrs[f"leaf_{i}"] = a
         np.savez(os.path.join(tmp, "shard_0.npz"), **arrs)
         manifest = {
@@ -92,13 +94,29 @@ def restore_checkpoint(ckpt_dir: str, like_tree, step: int | None = None
         raise ValueError(
             f"checkpoint has {manifest['n_leaves']} leaves, "
             f"model expects {len(leaves_like)}")
+    if manifest["treedef"] != str(treedef):
+        # same leaf count but different structure would silently restore
+        # leaves into the wrong slots (e.g. a fleet blob set whose rid
+        # keys changed between save and restore)
+        raise ValueError(
+            f"checkpoint treedef does not match like_tree:\n"
+            f"  saved:    {manifest['treedef']}\n"
+            f"  expected: {treedef}")
     import ml_dtypes
 
     leaves = []
     for i, like in enumerate(leaves_like):
         arr = data[f"leaf_{i}"]
-        if manifest["dtypes"][i] == "bfloat16":
+        saved_dt = manifest["dtypes"][i]
+        if saved_dt == "bfloat16":
             arr = arr.view(ml_dtypes.bfloat16)
+        want_dt = str(np.asarray(like).dtype)
+        if saved_dt != want_dt:
+            # a silent .view into the caller's dtype is exactly the bf16
+            # corruption this guard exists for: restored bytes must mean
+            # what the like_tree says they mean
+            raise ValueError(f"leaf {i}: checkpoint dtype {saved_dt} != "
+                             f"expected {want_dt}")
         if list(arr.shape) != list(np.shape(like)):
             raise ValueError(f"leaf {i}: shape {arr.shape} != "
                              f"{np.shape(like)}")

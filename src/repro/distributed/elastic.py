@@ -29,8 +29,11 @@ def plan_remesh(n_devices: int, prefer_model: int = 16,
     model = math.gcd(n_devices, prefer_model)
     rest = n_devices // model
     if n_devices >= multi_pod_threshold and rest % 2 == 0:
-        return (rest // 2 and (2, rest // 2, model) or (1, rest, model),
-                ("pod", "data", "model"))
+        if rest >= 2:
+            shape = (2, rest // 2, model)
+        else:   # model axis swallowed every device: a single "pod"
+            shape = (1, rest, model)
+        return shape, ("pod", "data", "model")
     return (rest, model), ("data", "model")
 
 

@@ -25,10 +25,20 @@ hit.  Outputs stay bit-identical to a cold-cache run; under
 ``--route session_affinity`` the replica whose cache holds the session's
 pages wins the routing decision.
 
+``--workers N`` switches to fleet mode (serving/fleet/): N workers
+behind the versioned wire protocol — in-process under
+``--transport loopback``, real subprocesses under ``--transport
+socket`` — with heartbeat health tracking, ``--spares K`` hot spares,
+and snapshot-based failover that keeps every recovered token stream
+bit-identical to an undisturbed run.
+
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
       --requests 8 --max-new 16 --replicas 2 --route least_loaded \
       --policy edf --deadline 5.0 --chunk-prefill 8 \
       --temperature 0.8 --top-k 40 --stream
+
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m \
+      --requests 8 --workers 2 --spares 1 --transport socket
 
 Typical surface usage (what this driver does):
 
@@ -72,6 +82,18 @@ def main():
                          "replicas")
     ap.add_argument("--no-migrate", action="store_true",
                     help="disable cross-replica slot migration")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="fleet mode: N workers behind the fleet wire "
+                         "protocol with heartbeat health tracking and "
+                         "snapshot-based failover (0 = classic in-process "
+                         "replicas)")
+    ap.add_argument("--transport", default="loopback",
+                    choices=["loopback", "socket"],
+                    help="fleet transport: loopback = in-process workers "
+                         "behind the byte-faithful wire codec; socket = "
+                         "real subprocess workers over TCP")
+    ap.add_argument("--spares", type=int, default=0,
+                    help="hot spare workers promoted on failover")
     ap.add_argument("--mode", default="auto",
                     choices=["auto", "wave", "continuous"],
                     help="auto = continuous where the family supports a "
@@ -112,18 +134,35 @@ def main():
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    params = model_lib.init_params(cfg, jax.random.PRNGKey(0),
-                                   max_seq=args.max_seq)
-    if args.quant == "int8":
-        params = quantize_params(params)  # the paper's W8A8 deployment mode
-    client = ServingClient(
-        cfg, params, replicas=args.replicas, route=args.route,
-        migrate=not args.no_migrate, seed_base=args.seed,
-        max_batch=args.max_batch, max_seq=args.max_seq, eos_id=-1,
-        mode=args.mode, page_size=args.page_size, overlap=args.overlap,
-        prefix_cache=args.prefix_cache,
-        scheduler=make_scheduler(args.policy,
-                                 chunk_tokens=args.chunk_prefill or None))
+    if args.workers and args.transport == "socket":
+        # subprocess workers rebuild params themselves from (arch, seed);
+        # quant / prefix-cache / mode are per-worker features the worker
+        # CLI does not expose yet
+        from repro.serving.fleet.router import FleetRouter
+        router = FleetRouter.build_socket(
+            args.arch, workers=args.workers, spares=args.spares,
+            policy=args.route, migrate=not args.no_migrate,
+            sched_policy=args.policy, reduced=bool(args.reduced),
+            max_batch=args.max_batch, max_seq=args.max_seq,
+            page_size=args.page_size, eos_id=-1, overlap=args.overlap,
+            chunk_prefill=args.chunk_prefill)
+        client = ServingClient(router=router, seed_base=args.seed)
+    else:
+        params = model_lib.init_params(cfg, jax.random.PRNGKey(0),
+                                       max_seq=args.max_seq)
+        if args.quant == "int8":
+            params = quantize_params(params)  # the paper's W8A8 mode
+        client = ServingClient(
+            cfg, params, replicas=args.replicas, route=args.route,
+            migrate=not args.no_migrate, seed_base=args.seed,
+            workers=args.workers, transport=args.transport,
+            spares=args.spares,
+            max_batch=args.max_batch, max_seq=args.max_seq, eos_id=-1,
+            mode=args.mode, page_size=args.page_size, overlap=args.overlap,
+            prefix_cache=args.prefix_cache,
+            scheduler=make_scheduler(args.policy,
+                                     chunk_tokens=args.chunk_prefill
+                                     or None))
     rng = jax.random.PRNGKey(42)
     for i in range(args.requests):
         rng, k = jax.random.split(rng)
@@ -153,6 +192,14 @@ def main():
     print(f"requests={args.requests} tokens_out={tokens} "
           f"decode_steps={steps} wall={dt:.1f}s tok/s={tokens/dt:.1f}")
     print(client.summary())
+    fleet = getattr(client.router, "fleet", None)
+    if fleet is not None:   # fleet mode: surface the failover counters
+        print(f"fleet shutdown: workers_lost={fleet.workers_lost} "
+              f"failovers={fleet.failovers} "
+              f"requests_replayed={fleet.requests_replayed} "
+              f"tokens_replayed={fleet.tokens_replayed} "
+              f"heartbeat_misses={fleet.heartbeat_misses}")
+        client.router.close()
 
 
 if __name__ == "__main__":

@@ -84,21 +84,41 @@ class RequestHandle:
 class ServingClient:
     """User-facing serving surface over N engine replicas.
 
-    Either wrap an existing :class:`Router` (``router=``) or let the
-    client build one: ``replicas`` / ``route`` / ``migrate`` plus any
+    Either wrap an existing router (``router=`` — an in-process
+    :class:`Router` or a :class:`repro.serving.fleet.router.FleetRouter`,
+    both speak the same surface) or let the client build one:
+    ``replicas`` / ``route`` / ``migrate`` plus any
     :class:`repro.serving.core.EngineCore` keyword (``max_batch``,
-    ``max_seq``, ``scheduler``, ``kv_tier``, ...).
+    ``max_seq``, ``scheduler``, ``kv_tier``, ...).  ``workers=N`` builds
+    a loopback FleetRouter instead — N workers behind the fleet wire
+    codec with ``spares=K`` hot spares and snapshot-based failover; for
+    subprocess workers build ``FleetRouter.build_socket(...)`` yourself
+    and pass it as ``router=`` (socket workers rebuild params from the
+    arch name, which the client does not assume it knows).
     """
 
     def __init__(self, cfg=None, params=None, *, router: Router = None,
                  replicas: int = 1, route: str = "round_robin",
-                 migrate: bool = True, seed_base: int = 0, **engine_kw):
+                 migrate: bool = True, seed_base: int = 0,
+                 workers: int = 0, transport: str = "loopback",
+                 spares: int = 0, **engine_kw):
         if router is None:
             if cfg is None or params is None:
                 raise ValueError("pass (cfg, params) or a prebuilt router=")
-            router = Router.build(cfg, params, replicas=replicas,
-                                  policy=route, migrate=migrate,
-                                  **engine_kw)
+            if workers:
+                if transport != "loopback":
+                    raise ValueError(
+                        "ServingClient builds loopback fleets only; for "
+                        "socket workers use FleetRouter.build_socket(...) "
+                        "and pass router=")
+                from repro.serving.fleet.router import FleetRouter
+                router = FleetRouter.build_loopback(
+                    cfg, params, workers=workers, spares=spares,
+                    policy=route, migrate=migrate, **engine_kw)
+            else:
+                router = Router.build(cfg, params, replicas=replicas,
+                                      policy=route, migrate=migrate,
+                                      **engine_kw)
         self.router = router
         self.seed_base = seed_base
         self._next_rid = 0

@@ -281,6 +281,25 @@ class SlotSnapshot:
     def n_pages(self) -> int:
         return len(self.pages)
 
+    def to_bytes(self) -> bytes:
+        """Standalone byte format (versioned header carrying the geometry
+        — family, page_size, page dtype — then the encoded fields); the
+        fleet transport and the failover checkpoints both speak it."""
+        from repro.serving.fleet import wire
+        return wire.snapshot_to_bytes(self)
+
+    @classmethod
+    def from_bytes(cls, data: bytes, expect_family: str = None,
+                   expect_page_size: int = None,
+                   expect_dtype: str = None) -> "SlotSnapshot":
+        """Inverse of :meth:`to_bytes`.  ``expect_*`` is the geometry
+        guard: a receiver that knows its own family / page_size / page
+        dtype gets a ``ValueError`` on mismatch before the body decodes."""
+        from repro.serving.fleet import wire
+        return wire.snapshot_from_bytes(
+            data, expect_family=expect_family,
+            expect_page_size=expect_page_size, expect_dtype=expect_dtype)
+
 
 def _batch_extras(cfg: ModelConfig, batch: int) -> dict:
     if cfg.family == "vlm":
@@ -429,6 +448,13 @@ class EngineStats:
     prefix_hit_pages: int = 0  # shared pages mapped instead of re-prefilled
     prefix_tokens_reused: int = 0  # prompt tokens whose prefill was skipped
     cow_copies: int = 0        # private copies made of (tail) shared pages
+    # fleet health / failover accounting (populated by the FleetRouter's
+    # fleet-level stats object; always 0 on a single in-process engine)
+    workers_lost: int = 0      # workers declared dead (SIGKILL, hang, EOF)
+    failovers: int = 0         # failover passes run (one per lost worker)
+    requests_replayed: int = 0  # requests re-dispatched by failover
+    tokens_replayed: int = 0   # re-decoded tokens suppressed as duplicates
+    heartbeat_misses: int = 0  # reply deadlines blown (straggle signal)
     # per-request latency samples, appended at completion
     admission_wait_s: list = dataclasses.field(default_factory=list)
     ttft_s: list = dataclasses.field(default_factory=list)
@@ -465,6 +491,11 @@ class EngineStats:
                   f" pages={self.prefix_hit_pages}"
                   f" tokens={self.prefix_tokens_reused}"
                   f" cow={self.cow_copies}")
+        if self.workers_lost or self.failovers or self.heartbeat_misses:
+            s += (f" workers_lost={self.workers_lost} "
+                  f"failovers={self.failovers} replayed "
+                  f"req/tok={self.requests_replayed}/{self.tokens_replayed} "
+                  f"heartbeat_misses={self.heartbeat_misses}")
         return s
 
 
@@ -738,7 +769,7 @@ class EngineCore:
     # ------------------------------------------------------------------
     # command surface: snapshot / inject (cross-replica slot migration)
     # ------------------------------------------------------------------
-    def snapshot_slot(self, rid: int) -> SlotSnapshot:
+    def snapshot_slot(self, rid: int, release: bool = True) -> SlotSnapshot:
         """Drain request ``rid``'s slot into a :class:`SlotSnapshot` and
         release it locally (the request is NOT finished — it continues
         wherever the snapshot is injected).
@@ -747,6 +778,12 @@ class EngineCore:
         hot pages through one bucketed ``swap_out_pages`` gather, cold
         pages straight out of the allocator's blob store — so a partially
         spilled (suspended) slot snapshots without prefetching first.
+
+        ``release=False`` is the CHECKPOINT variant (periodic fleet
+        failover snapshots): the slot keeps running here and the cold
+        store keeps its payloads — the snapshot aliases live state
+        (``req``, cold payload arrays), so serialize it before the engine
+        steps again.
         """
         if self.mode != "continuous":
             raise ValueError("snapshot_slot needs mode='continuous'")
@@ -769,7 +806,8 @@ class EngineCore:
                 pages[j] = payload
         for j, pid in enumerate(self.slot_pages[i]):
             if pid == 0:  # cold: payload already host-side (or in DMA flight)
-                pages[j] = _payload_np(self.allocator.fetch((i, j)))
+                pages[j] = _payload_np(self.allocator.fetch((i, j)) if release
+                                       else self.allocator.peek((i, j)))
         snap = SlotSnapshot(
             req=req, slot_len=self.slot_len[i],
             last_token=int(self.last_np[i]),
@@ -780,9 +818,10 @@ class EngineCore:
             page_size=self.page_size, family=self.cfg.family,
             prefix_keys=(dict(self.slot_shared[i]) if self._px is not None
                          else None))
-        self._release_slot(i)
-        req.n_migrated += 1
-        self.stats.migrated_out += 1
+        if release:
+            self._release_slot(i)
+            req.n_migrated += 1
+            self.stats.migrated_out += 1
         return snap
 
     def inject_slot(self, snap: SlotSnapshot) -> int:

@@ -1,0 +1,23 @@
+"""Fleet serving: EngineCore workers behind a wire protocol.
+
+The step from "multi-replica" to "fleet" (ROADMAP): the in-process
+Router seam goes across process boundaries.  Three pieces:
+
+* :mod:`repro.serving.fleet.wire` — the length-prefixed, versioned
+  binary codec every command and reply travels through, including the
+  :class:`repro.serving.core.SlotSnapshot` byte format.
+* :mod:`repro.serving.fleet.transport` — the transport seam: an
+  in-process loopback (byte-faithful — every payload round-trips
+  through the codec) and a socket transport driving real subprocess
+  workers (:mod:`repro.serving.fleet.worker`).
+* :mod:`repro.serving.fleet.router` — the FleetRouter: routing, health
+  detection (heartbeat misses / reply deadlines), periodic snapshot
+  checkpoints, and failover that re-dispatches a dead worker's requests
+  with a bit-identical recovered token stream.
+"""
+
+from repro.serving.fleet.router import FleetRouter  # noqa: F401
+from repro.serving.fleet.transport import (  # noqa: F401
+    LoopbackTransport, RemoteError, SocketTransport, TransportClosed,
+    TransportError, TransportTimeout, spawn_worker)
+from repro.serving.fleet.wire import FrameDecoder, ProtocolError  # noqa: F401

@@ -213,6 +213,12 @@ class TieredPageAllocator:
         freshly allocated hot page and remaps the block table)."""
         return self._cold.pop(key)
 
+    def peek(self, key: PageKey):
+        """Read one cold page's payload WITHOUT removing it — the
+        non-destructive snapshot path (periodic fleet checkpoints must
+        leave the tier intact while the slot keeps running)."""
+        return self._cold[key]
+
     def cold_keys(self, match) -> list[PageKey]:
         """Cold pages with ``match(key)`` true, in insertion (spill) order."""
         return [k for k in self._cold if match(k)]

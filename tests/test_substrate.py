@@ -214,6 +214,68 @@ def test_checkpoint_shape_mismatch_detected(tmp_path):
         restore_checkpoint(str(tmp_path), {"a": jnp.ones((3,))})
 
 
+def test_checkpoint_bf16_restore_bit_identical(tmp_path):
+    """Saved-then-restored bf16 payloads (incl. strided views, the shape
+    fleet SlotSnapshot page payloads arrive in) are bit-identical — the
+    uint16 round-trip must not touch a single bit pattern."""
+    import ml_dtypes
+
+    from repro.distributed.checkpoint import restore_checkpoint, save_checkpoint
+
+    rng = np.random.default_rng(0)
+    base = rng.standard_normal((4, 8)).astype(ml_dtypes.bfloat16)
+    tree = {"page_k": base, "page_v": base[:, ::-1],      # strided view
+            "blob": rng.integers(0, 256, 64).astype(np.uint8),
+            "special": np.array([np.inf, -np.inf, np.nan, -0.0, 1e-38],
+                                dtype=ml_dtypes.bfloat16)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    like = jax.tree.map(np.zeros_like, tree)
+    restored, _ = restore_checkpoint(str(tmp_path), like)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert np.asarray(a).dtype == np.asarray(b).dtype
+        # bitwise, not value-wise: NaN payloads and -0.0 must survive too
+        np.testing.assert_array_equal(
+            np.ascontiguousarray(a).view(np.uint8),
+            np.ascontiguousarray(b).view(np.uint8))
+
+
+def test_checkpoint_dtype_and_treedef_guards(tmp_path):
+    """Restore refuses silent reinterpretation: a like_tree whose dtype
+    or structure disagrees with the manifest raises instead of viewing
+    the stored bytes into the wrong meaning."""
+    import ml_dtypes
+
+    from repro.distributed.checkpoint import restore_checkpoint, save_checkpoint
+
+    tree = {"a": np.ones((2, 2), ml_dtypes.bfloat16),
+            "b": np.zeros(3, np.int32)}
+    save_checkpoint(str(tmp_path), 1, tree)
+    with pytest.raises(ValueError, match="dtype"):
+        restore_checkpoint(str(tmp_path),
+                           {"a": np.ones((2, 2), np.uint16),   # same bytes!
+                            "b": np.zeros(3, np.int32)})
+    with pytest.raises(ValueError, match="treedef"):
+        restore_checkpoint(str(tmp_path),
+                           {"x": np.ones((2, 2), ml_dtypes.bfloat16),
+                            "b": np.zeros(3, np.int32)})
+
+
+def test_plan_remesh_shapes():
+    from repro.distributed.elastic import plan_remesh
+
+    # small survivor counts: 2-axis mesh, model axis = gcd with prefer
+    assert plan_remesh(8, prefer_model=4) == ((2, 4), ("data", "model"))
+    assert plan_remesh(6, prefer_model=4) == ((3, 2), ("data", "model"))
+    # pod-scale with an even data axis splits out a pod axis of 2
+    shape, names = plan_remesh(1024, prefer_model=16)
+    assert names == ("pod", "data", "model")
+    assert shape == (2, 32, 16)
+    assert shape[0] * shape[1] * shape[2] == 1024
+    # odd data axis at pod scale stays 2-axis
+    shape, names = plan_remesh(528, prefer_model=16)
+    assert names == ("data", "model") and shape == (33, 16)
+
+
 def test_data_pipeline_resumable():
     from repro.training.data import DataState, make_batch
 
