@@ -1,9 +1,10 @@
 # Convenience targets; CI runs the same commands (.github/workflows/ci.yml).
 
 .PHONY: test test-fast test-slow test-families test-fleet \
-	test-fleet-socket bench-serving bench-serving-smoke \
+	test-fleet-socket test-quant bench-serving bench-serving-smoke \
 	bench-serving-policy bench-serving-kvtier-mla bench-serving-router \
-	bench-serving-overlap bench-serving-prefix bench-serving-fleet
+	bench-serving-overlap bench-serving-prefix bench-serving-fleet \
+	bench-serving-quant
 
 # every family where supports_paged() is true — the serving conformance
 # matrix (test ids are fam_<family>, substring-safe: fam_moe != fam_mla_moe)
@@ -34,9 +35,17 @@ test-families:
 		python -m pytest -x -q tests/test_serving.py \
 			tests/test_tiered_kv.py tests/test_router.py \
 			tests/test_overlap.py tests/test_prefix_cache.py \
-			tests/test_fleet.py \
+			tests/test_fleet.py tests/test_quant_serving.py \
 			-k "fam_$$f"; \
 	done
+
+# quantization tier: weight/activation round-trip properties, kernel-vs-ref
+# parity (int8 pagegemv per-column scales, w4a16 tile clamp), the
+# quantize_params router exemption, and int8-KV serving — cross-path
+# bit-identity (overlap, tiered spill, migration, fleet failover), greedy
+# parity vs bf16, and the halved spill-byte accounting
+test-quant:
+	python -m pytest -x -q tests/test_quant.py tests/test_quant_serving.py
 
 # fleet serving over the loopback transport: wire-codec/framing adversity,
 # per-family snapshot byte round-trips, and kill-mid-decode failover with
@@ -101,3 +110,12 @@ bench-serving-router:
 bench-serving-fleet:
 	PYTHONPATH=src python benchmarks/bench_serving.py --smoke \
 		--trace fleet --workers 2 --spares 1
+
+# int8-KV trace: bf16 vs int8 page pools racing the capacity-constrained
+# tiered trace (d_head bumped to 64 so the page ratio prices real head
+# dims) — 100% completion on every variant, int8 tiered bit-identical to
+# int8 resident, >= 1.8x fewer spill bytes; reports TTFT/tok-s deltas and
+# reprices the traffic on the flash channel model
+bench-serving-quant:
+	PYTHONPATH=src python benchmarks/bench_serving.py --smoke \
+		--trace quant

@@ -28,8 +28,9 @@ def paged_int8_gemv(w_q: jax.Array, scale: jax.Array, x: jax.Array,
     """W8A8 GeMV/GeMM through the Pallas kernel.
 
     w_q: int8 [h, w]; scale: f32 [h]; x: float [w] or [w, b] -> f32 [h(, b)].
-    Pads to tile multiples, quantizes activations per tensor, dequantizes the
-    int32 accumulators with per-row scales (paper §IV-B compute-core flow).
+    Pads to tile multiples, quantizes activations per column (one dynamic
+    scale per token), dequantizes the int32 accumulators with
+    ``scale[h] ⊗ x_scale[b]`` (paper §IV-B compute-core flow).
     """
     squeeze = x.ndim == 1
     if squeeze:
@@ -41,5 +42,5 @@ def paged_int8_gemv(w_q: jax.Array, scale: jax.Array, x: jax.Array,
     x_p = _pad_to(x_q, 0, tw)
     acc = paged_int8_gemm(w_p, x_p, tile_h=th, tile_w=tw,
                           interpret=interpret)[:h]
-    y = acc.astype(jnp.float32) * scale[:, None] * x_scale
+    y = acc.astype(jnp.float32) * scale[:, None] * x_scale[None, :]
     return y[:, 0] if squeeze else y

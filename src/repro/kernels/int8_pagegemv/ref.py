@@ -26,5 +26,5 @@ def paged_int8_gemv_ref(w_q: jax.Array, scale: jax.Array,
         x = x[:, None]
     x_q, x_scale = quantize_activation(x)
     acc = paged_int8_gemm_ref(w_q, x_q).astype(jnp.float32)
-    y = acc * scale[:, None] * x_scale
+    y = acc * scale[:, None] * x_scale[None, :]
     return y[:, 0] if squeeze else y

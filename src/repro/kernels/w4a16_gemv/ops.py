@@ -20,9 +20,13 @@ def w4a16_gemv(q: QuantizedLinear4, x: jax.Array, tile_h: int = 256,
         x = x[:, None]
     h, w = q.h, q.w
     group = min(GROUP, w)
-    tw = min(tile_w, w)
-    tw -= tw % (2 * group) or 0
-    tw = max(tw, 2 * group)
+    # round the tile width down to a multiple of `group` (the scale-group
+    # granularity the kernel reshapes by; group is even, so the nibble-pair
+    # constraint rides along), flooring at one group.  The old
+    # `tw -= tw % (2 * group) or 0; tw = max(tw, 2 * group)` bounce had a
+    # dead `or 0` and inflated padding ~2x whenever w < 2 * group
+    # (e.g. w == group padded to 2 * group).
+    tw = max((min(tile_w, w) // group) * group, group)
     th = min(tile_h, h)
     ph = (-h) % th
     pw = (-w) % tw

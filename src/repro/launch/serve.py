@@ -25,6 +25,17 @@ hit.  Outputs stay bit-identical to a cold-cache run; under
 ``--route session_affinity`` the replica whose cache holds the session's
 pages wins the routing decision.
 
+``--quant w8a8`` serves from quantized weights: ``quantize_params``
+rewrites every non-router linear as int8 weights + per-output-channel
+scales (``w4a16`` packs int4 nibbles + per-group scales instead), the
+layers dispatch to the quantized matmuls, and the router/gate weights
+stay full precision.  ``--kv-dtype int8`` additionally quantizes the
+paged KV pool itself: pages hold int8 rows plus a per-row f32 scale,
+written once at prefill/decode time and dequantized at the attend, so
+spill, prefetch, prefix sharing, migration, and fleet snapshots all
+move the half-sized ``(payload, scale)`` pages unchanged — decode
+streams stay bit-identical to themselves across every relocation path.
+
 ``--workers N`` switches to fleet mode (serving/fleet/): N workers
 behind the versioned wire protocol — in-process under
 ``--transport loopback``, real subprocesses under ``--transport
@@ -128,16 +139,27 @@ def main():
                          "never collide across replicas")
     ap.add_argument("--stream", action="store_true",
                     help="print each RequestOutput token event")
-    ap.add_argument("--quant", default="int8", choices=["none", "int8"])
+    ap.add_argument("--quant", default="w8a8",
+                    choices=["none", "w8a8", "w4a16", "int8"],
+                    help="weight quantization mode for quantize_params "
+                         "(router/gate weights stay full precision; "
+                         "'int8' is the legacy alias for w8a8)")
+    ap.add_argument("--kv-dtype", default="bf16", choices=["bf16", "int8"],
+                    help="paged KV pool dtype: int8 stores quantized page "
+                         "rows + per-row f32 scales (half the spill bytes, "
+                         "self-bit-identical across every relocation path)")
     args = ap.parse_args()
+    if args.quant == "int8":
+        args.quant = "w8a8"
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     if args.workers and args.transport == "socket":
-        # subprocess workers rebuild params themselves from (arch, seed);
-        # quant / prefix-cache / mode are per-worker features the worker
-        # CLI does not expose yet
+        # subprocess workers rebuild params themselves from (arch, seed)
+        # and quantize locally, so nothing heavy ships over the wire;
+        # prefix-cache / mode are per-worker features the worker CLI does
+        # not expose yet
         from repro.serving.fleet.router import FleetRouter
         router = FleetRouter.build_socket(
             args.arch, workers=args.workers, spares=args.spares,
@@ -145,13 +167,14 @@ def main():
             sched_policy=args.policy, reduced=bool(args.reduced),
             max_batch=args.max_batch, max_seq=args.max_seq,
             page_size=args.page_size, eos_id=-1, overlap=args.overlap,
-            chunk_prefill=args.chunk_prefill)
+            chunk_prefill=args.chunk_prefill,
+            kv_dtype=args.kv_dtype, quant=args.quant)
         client = ServingClient(router=router, seed_base=args.seed)
     else:
         params = model_lib.init_params(cfg, jax.random.PRNGKey(0),
                                        max_seq=args.max_seq)
-        if args.quant == "int8":
-            params = quantize_params(params)  # the paper's W8A8 mode
+        if args.quant != "none":
+            params = quantize_params(params, mode=args.quant)
         client = ServingClient(
             cfg, params, replicas=args.replicas, route=args.route,
             migrate=not args.no_migrate, seed_base=args.seed,
@@ -159,7 +182,7 @@ def main():
             spares=args.spares,
             max_batch=args.max_batch, max_seq=args.max_seq, eos_id=-1,
             mode=args.mode, page_size=args.page_size, overlap=args.overlap,
-            prefix_cache=args.prefix_cache,
+            prefix_cache=args.prefix_cache, kv_dtype=args.kv_dtype,
             scheduler=make_scheduler(args.policy,
                                      chunk_tokens=args.chunk_prefill
                                      or None))

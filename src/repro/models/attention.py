@@ -128,39 +128,83 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 
 # ---------------------------------------------------------------------------
 # paged KV cache (block-table indirection, per-slot lengths)
+#
+# A pool is either a plain array [P, page, *row] or — for kv_dtype="int8" —
+# a (data int8 [P, page, *row], scale f32 [P, page, *row[:-1]]) pair with
+# one symmetric per-row scale over the last axis (per-page-per-head for GQA
+# pools, per-page-row for MLA's compressed rows).  Rows quantize ONCE at
+# write (prefill scatter + decode append) and dequantize at the gathered
+# block-row attend; the scale depends only on the row's own values, so the
+# page bits are a pure function of the token span — the property that keeps
+# spill/prefetch, migration, and prefix sharing bit-identical.
 # ---------------------------------------------------------------------------
 
 
-def gather_paged_rows(pages: jax.Array, block_table: jax.Array) -> jax.Array:
+def quantize_rows(rows: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """float [..., D] -> (int8 [..., D], f32 [...] per-row scale)."""
+    rf = rows.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(rf), axis=-1)
+    scale = jnp.maximum(absmax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(rf / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_rows(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def gather_paged_rows(pages, block_table: jax.Array) -> jax.Array:
     """Materialize each slot's contiguous view from ONE page pool.
 
-    pages: [P, page, *row]; block_table: [B, pages_per_slot] int32 page ids
-    (0 = the reserved null page).  Returns [B, Smax, *row] with
+    pages: [P, page, *row] (or an int8 ``(data, scale)`` pool — the view
+    comes back dequantized to f32); block_table: [B, pages_per_slot] int32
+    page ids (0 = the reserved null page).  Returns [B, Smax, *row] with
     Smax = pages_per_slot * page.  Row shape is free — [Hkv, D] for a GQA
     K or V pool, [R] for an MLA compressed-ckv pool, [Dr] for its krope.
     """
+    if isinstance(pages, tuple):
+        data, scale = pages
+        return dequantize_rows(gather_paged_rows(data, block_table),
+                               gather_paged_rows(scale, block_table))
     b, pages_per_slot = block_table.shape
     page = pages.shape[1]
     rest = pages.shape[2:]
     return pages[block_table].reshape(b, pages_per_slot * page, *rest)
 
 
-def write_paged_rows(pages: jax.Array, rows: jax.Array,
+def write_paged_rows(pages, rows: jax.Array,
                      block_table: jax.Array, lengths: jax.Array,
-                     active: jax.Array) -> jax.Array:
+                     active: jax.Array):
     """Scatter one new token's row per slot into its current page.
 
-    pages: [P, page, *row]; rows: [B, *row] (this step's values); lengths:
-    [B] write positions (= valid length before this token); active: [B]
-    bool.  Inactive slots are redirected to the reserved null page 0 so
-    their garbage never lands in a page owned by a live request.
+    pages: [P, page, *row] or an int8 ``(data, scale)`` pool (rows quantize
+    at this write); rows: [B, *row] (this step's values); lengths: [B]
+    write positions (= valid length before this token); active: [B] bool.
+    Inactive slots are redirected to the reserved null page 0 so their
+    garbage never lands in a page owned by a live request.
     """
-    page = pages.shape[1]
+    page = (pages[0] if isinstance(pages, tuple) else pages).shape[1]
     b = rows.shape[0]
     page_idx = block_table[jnp.arange(b), lengths // page]
     page_idx = jnp.where(active, page_idx, 0)
     offset = lengths % page
+    if isinstance(pages, tuple):
+        data, scale = pages
+        q, s = quantize_rows(rows)
+        return (data.at[page_idx, offset].set(q),
+                scale.at[page_idx, offset].set(s))
     return pages.at[page_idx, offset].set(rows.astype(pages.dtype))
+
+
+def scatter_chunk_rows(pages, rows: jax.Array, pid: jax.Array,
+                       off: jax.Array):
+    """Scatter a chunk's rows at explicit (page, offset) indices — the
+    chunked-prefill write path.  rows: [C, *row]; pid/off: [C]."""
+    if isinstance(pages, tuple):
+        data, scale = pages
+        q, s = quantize_rows(rows)
+        return data.at[pid, off].set(q), scale.at[pid, off].set(s)
+    return pages.at[pid, off].set(rows.astype(pages.dtype))
 
 
 def gather_paged_kv(k_pages: jax.Array, v_pages: jax.Array,

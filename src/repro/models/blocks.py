@@ -8,10 +8,11 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.kernels.compat import shard_map
 from repro.models.attention import (_repeat_kv, chunked_attention,
-                                    decode_attention, gather_kv_pages,
-                                    gather_paged_rows, paged_chunk_attention,
-                                    paged_decode_attention, scatter_kv_pages,
-                                    write_paged_kv, write_paged_rows)
+                                    decode_attention, gather_paged_rows,
+                                    paged_chunk_attention,
+                                    paged_decode_attention,
+                                    scatter_chunk_rows, write_paged_kv,
+                                    write_paged_rows)
 from repro.models.layers import (apply_mrope, apply_rope, init_linear,
                                  layer_norm, linear, rms_norm)
 
@@ -173,13 +174,13 @@ def attn_prefill_chunk_paged(params: dict, x: jax.Array, cfg: ModelConfig,
     k = linear(params["k"], x).reshape(b, c, cfg.n_kv_heads, cfg.d_head)
     v = linear(params["v"], x).reshape(b, c, cfg.n_kv_heads, cfg.d_head)
     q, k = _rope_qk(cfg, q, k, positions)
-    page = k_pages.shape[1]
+    page = (k_pages[0] if isinstance(k_pages, tuple) else k_pages).shape[1]
     pps = block_row.shape[0]
     gpos = positions[0]
     pid = jnp.where(valid, block_row[jnp.clip(gpos // page, 0, pps - 1)], 0)
     off = gpos % page
-    k_pages = k_pages.at[pid, off].set(k[0].astype(k_pages.dtype))
-    v_pages = v_pages.at[pid, off].set(v[0].astype(v_pages.dtype))
+    k_pages = scatter_chunk_rows(k_pages, k[0], pid, off)
+    v_pages = scatter_chunk_rows(v_pages, v[0], pid, off)
     out = paged_chunk_attention(q, k_pages, v_pages, block_row[None],
                                 positions)
     out = linear(params["o"], out.reshape(b, c, -1))
@@ -197,32 +198,50 @@ def paged_pool_names(cache: dict) -> tuple[str, str]:
     return ("ckv", "krope") if "ckv" in cache else ("k", "v")
 
 
-def kv_swap_out(cache: dict, page_ids: jax.Array
-                ) -> tuple[jax.Array, jax.Array]:
+def paged_pool_keys(cache: dict) -> tuple[str, ...]:
+    """Every cache key whose pages move on spill/snapshot — the two data
+    pools plus, under kv_dtype="int8", their f32 scale pools.  A page
+    payload is one array per key, in THIS order; everything that carries
+    payloads (tier, snapshots, wire) treats them as an opaque tuple, which
+    is how quantized pages ride the machinery unchanged."""
+    a, b = paged_pool_names(cache)
+    keys = (a, b)
+    if a + "_scale" in cache:
+        keys = keys + (a + "_scale", b + "_scale")
+    return keys
+
+
+def kv_swap_out(cache: dict, page_ids: jax.Array) -> tuple[jax.Array, ...]:
     """Spill path of the tiered KV cache: gather whole pages from the pool.
 
     cache: the paged cache dict (layer-stacked pools); page_ids: [n].
-    Returns the two page payloads bound for the flash tier —
+    Returns one page payload per pool key bound for the flash tier —
     ([L, n, page, Hkv, Dh] x2) for GQA k/v pools, ([L, n, page, R],
-    [L, n, page, Dr]) for MLA ckv/krope.  The pool itself is untouched —
-    the freed pids are simply handed back to the hot allocator.
+    [L, n, page, Dr]) for MLA ckv/krope, plus the matching [L, n, page,
+    ...] f32 scale payloads when the pools are int8.  The pool itself is
+    untouched — the freed pids are simply handed back to the hot allocator.
     """
-    a, b = paged_pool_names(cache)
-    return gather_kv_pages(cache[a], cache[b], page_ids)
+    return tuple(jnp.take(cache[key], page_ids, axis=1)
+                 for key in paged_pool_keys(cache))
 
 
-def kv_swap_in(cache: dict, page_ids: jax.Array, ks: jax.Array,
-               vs: jax.Array) -> dict:
+def kv_swap_in(cache: dict, page_ids: jax.Array, *payloads: jax.Array
+               ) -> dict:
     """Prefetch path: scatter fetched page payloads into (new) hot pages.
 
     The pages come back on *different* pids than they were spilled from; the
     engine remaps the owning slot's block-table row, which is what keeps
     decode math bit-identical to the all-resident run — attention only ever
-    sees the gathered values, not the pids.
+    sees the gathered values, not the pids.  ``payloads`` is one array per
+    ``paged_pool_keys`` entry, exactly as ``kv_swap_out`` returned them.
     """
-    a, b = paged_pool_names(cache)
-    pa, pb = scatter_kv_pages(cache[a], cache[b], page_ids, ks, vs)
-    return {**cache, a: pa, b: pb}
+    keys = paged_pool_keys(cache)
+    assert len(payloads) == len(keys), (len(payloads), keys)
+    out = {**cache}
+    for key, payload in zip(keys, payloads):
+        pool = cache[key]
+        out[key] = pool.at[:, page_ids].set(payload.astype(pool.dtype))
+    return out
 
 
 def cross_attn_decode(params: dict, x: jax.Array, cfg: ModelConfig,

@@ -24,14 +24,19 @@ def layer_norm(x: jax.Array, gamma: jax.Array, beta: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-# Linear: params are either {"w": [in, out] float} or the W8A8 form
-# {"w_q": int8 [out, in], "scale": f32 [out]} (+ optional {"b": [out]}).
+# Linear: params are {"w": [in, out] float}, the W8A8 form
+# {"w_q": int8 [out, in], "scale": f32 [out]}, or the W4A16 form
+# {"w_p4": uint8 [out, in//2], "scale4": f32 [out, ng]}
+# (+ optional {"b": [out]} on any of them).
 # ---------------------------------------------------------------------------
 
 
 def linear(params: dict, x: jax.Array) -> jax.Array:
     if "w_q" in params:
         y = _w8a8_matmul(params["w_q"], params["scale"], x)
+    elif "w_p4" in params:
+        y = (x.astype(jnp.float32)
+             @ _w4a16_weight(params["w_p4"], params["scale4"])).astype(x.dtype)
     else:
         y = x @ params["w"].astype(x.dtype)
     if "b" in params:
@@ -40,22 +45,36 @@ def linear(params: dict, x: jax.Array) -> jax.Array:
 
 
 def _w8a8_matmul(w_q: jax.Array, scale: jax.Array, x: jax.Array) -> jax.Array:
-    """y[..., out] = dequant(int8 matmul). Per-tensor dynamic act quant."""
-    absmax = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))), 1e-8)
+    """y[..., out] = dequant(int8 matmul). Per-token dynamic act quant:
+    one scale per row of x (absmax over the feature axis), so an outlier
+    token cannot crush the quantization resolution of its batchmates."""
+    xf = x.astype(jnp.float32)
+    absmax = jnp.maximum(jnp.max(jnp.abs(xf), axis=-1, keepdims=True), 1e-8)
     x_scale = absmax / 127.0
-    x_q = jnp.clip(jnp.round(x.astype(jnp.float32) / x_scale), -127, 127
-                   ).astype(jnp.int8)
+    x_q = jnp.clip(jnp.round(xf / x_scale), -127, 127).astype(jnp.int8)
     acc = jax.lax.dot_general(
         x_q, w_q, (((x.ndim - 1,), (1,)), ((), ())),
         preferred_element_type=jnp.int32)
-    y = acc.astype(jnp.float32) * (scale.astype(jnp.float32) * x_scale)
+    y = acc.astype(jnp.float32) * scale.astype(jnp.float32) * x_scale
     return y.astype(x.dtype)
 
 
+def _w4a16_weight(w_p4: jax.Array, scale4: jax.Array) -> jax.Array:
+    """Dequantize packed-nibble W4 weights to f32 [in, out] on the fly."""
+    from repro.quant.int4 import GROUP, QuantizedLinear4, dequantize4
+
+    h, wdt = w_p4.shape[0], 2 * w_p4.shape[1]
+    q = QuantizedLinear4(w_packed=w_p4, scale=scale4, h=h, w=wdt)
+    return dequantize4(q, group=min(GROUP, wdt)).T
+
+
 def dense_weight(params: dict) -> jax.Array:
-    """Materialize the float [in, out] weight of a (possibly W8A8) linear."""
+    """Materialize the float [in, out] weight of a (possibly quantized)
+    linear."""
     if "w" in params:
         return params["w"]
+    if "w_p4" in params:
+        return _w4a16_weight(params["w_p4"], params["scale4"])
     return (params["w_q"].astype(jnp.float32)
             * params["scale"][:, None].astype(jnp.float32)).T
 

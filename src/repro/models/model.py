@@ -42,7 +42,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.distributed import ctx
-from repro.models import blocks, moe as moe_mod, ssm as ssm_mod
+from repro.models import attention, blocks, moe as moe_mod, ssm as ssm_mod
 from repro.models.attention import chunked_attention
 from repro.models.layers import (ffn, init_ffn, init_linear, linear,
                                  mrope_positions)
@@ -426,7 +426,8 @@ def _hybrid_layout(cfg: ModelConfig) -> tuple[int, int, int]:
 
 def init_paged_cache(cfg: ModelConfig, num_slots: int, max_seq: int,
                      dtype=jnp.bfloat16, page_size: int = 16,
-                     num_pages: int | None = None) -> dict:
+                     num_pages: int | None = None,
+                     kv_dtype: str = "bf16") -> dict:
     """Block-table KV cache: a shared page pool + per-slot state.
 
     Layout (family-dependent page pools, one shared block table):
@@ -443,6 +444,13 @@ def init_paged_cache(cfg: ModelConfig, num_slots: int, max_seq: int,
       block  [slots, pages_per_slot] int32 page ids (0 where unallocated).
       lens   [slots] int32 per-slot valid lengths.
 
+    ``kv_dtype="int8"`` stores each page pool as int8 with a companion f32
+    scale pool under ``<pool>_scale`` (shape = pool shape minus the last
+    axis: one symmetric scale per page row per head, or per compressed row
+    for MLA).  Rows quantize at write and dequantize at the gathered
+    block-row attend (``models.attention``); spill/snapshot machinery moves
+    the (int8 payload, scales) pair as extra ``paged_pool_keys`` entries.
+
     Page 0 is the reserved *null page*: inactive slots park their writes
     there so freed pages can be handed to other requests immediately.
 
@@ -456,18 +464,27 @@ def init_paged_cache(cfg: ModelConfig, num_slots: int, max_seq: int,
     """
     if not supports_paged(cfg):
         raise ValueError(f"paged cache unsupported for family {cfg.family!r}")
+    if kv_dtype not in ("bf16", "int8"):
+        raise ValueError(f"unknown kv_dtype: {kv_dtype!r}")
     pages_per_slot = -(-max_seq // page_size)
     if num_pages is None:
         num_pages = num_slots * pages_per_slot + 1
     base = {"block": jnp.zeros((num_slots, pages_per_slot), jnp.int32),
             "lens": jnp.zeros((num_slots,), jnp.int32)}
+
+    def pools(**shapes) -> dict:
+        if kv_dtype == "int8":
+            out = {k: jnp.zeros(s, jnp.int8) for k, s in shapes.items()}
+            out.update({k + "_scale": jnp.zeros(s[:-1], jnp.float32)
+                        for k, s in shapes.items()})
+            return out
+        return {k: jnp.zeros(s, dtype) for k, s in shapes.items()}
+
     f = cfg.family
     if f == "mla_moe":
         nl = cfg.n_layers
-        return {"ckv": jnp.zeros((nl, num_pages, page_size,
-                                  cfg.kv_lora_rank), dtype),
-                "krope": jnp.zeros((nl, num_pages, page_size,
-                                    cfg.qk_rope_dim), dtype),
+        return {**pools(ckv=(nl, num_pages, page_size, cfg.kv_lora_rank),
+                        krope=(nl, num_pages, page_size, cfg.qk_rope_dim)),
                 **base}
     if f == "hybrid":
         n_groups, every, tail = _hybrid_layout(cfg)
@@ -477,18 +494,23 @@ def init_paged_cache(cfg: ModelConfig, num_slots: int, max_seq: int,
             return jax.tree.map(
                 lambda a: jnp.zeros(tuple(dims) + a.shape, a.dtype), tree)
         kv = (n_groups, num_pages, page_size, cfg.n_kv_heads, cfg.d_head)
-        return {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype),
+        return {**pools(k=kv, v=kv),
                 "mamba": rep(one, n_groups, every),
                 "tail": rep(one, tail) if tail else None,
                 **base}
     shape = (cfg.n_layers, num_pages, page_size, cfg.n_kv_heads, cfg.d_head)
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
-            **base}
+    return {**pools(k=shape, v=shape), **base}
 
 
 def paged_pool_dtype(cache: dict):
-    """dtype of the page pools (the bytes that move on spill/prefetch)."""
+    """dtype of the page pools (the bytes that move on spill/prefetch) —
+    int8 under kv_dtype="int8"."""
     return cache["ckv" if "ckv" in cache else "k"].dtype
+
+
+def paged_kv_dtype(cache: dict) -> str:
+    """The cache's kv_dtype string ("bf16" or "int8")."""
+    return "int8" if paged_pool_dtype(cache) == jnp.int8 else "bf16"
 
 
 def paged_slot_capacity(cache: dict) -> int:
@@ -497,18 +519,48 @@ def paged_slot_capacity(cache: dict) -> int:
     return cache["block"].shape[1] * pool.shape[2]
 
 
+def _pool(cache: dict, key: str):
+    """The attend/write view of one page pool: the plain array, or the
+    (int8 data, f32 scales) pair under kv_dtype="int8"."""
+    sk = key + "_scale"
+    return (cache[key], cache[sk]) if sk in cache else cache[key]
+
+
+def _pool_update(cache: dict, key: str, pool) -> dict:
+    """Cache-dict updates for a pool coming back out of a scan."""
+    if isinstance(pool, tuple):
+        return {key: pool[0], key + "_scale": pool[1]}
+    return {key: pool}
+
+
+def _pool_slice(pool, sl):
+    """Slice a (possibly paired) pool along its leading layer axis."""
+    if isinstance(pool, tuple):
+        return tuple(p[sl] for p in pool)
+    return pool[sl]
+
+
+def _pool_concat(a, b):
+    """Concatenate two (possibly paired) pool slices along the layer axis."""
+    if isinstance(a, tuple):
+        return tuple(jnp.concatenate([x, y], 0) for x, y in zip(a, b))
+    return jnp.concatenate([a, b], 0)
+
+
 def swap_out_pages(cache: dict, page_ids: jax.Array
-                   ) -> tuple[jax.Array, jax.Array]:
-    """Gather page payloads ([L, n, page, Hkv, Dh] x2) for spill to the
-    flash KV tier.  ``page_ids`` may be null-page padded to a shape bucket."""
+                   ) -> tuple[jax.Array, ...]:
+    """Gather page payloads (one array per ``blocks.paged_pool_keys`` entry,
+    e.g. [L, n, page, Hkv, Dh] x2, plus f32 scale payloads when int8) for
+    spill to the flash KV tier.  ``page_ids`` may be null-page padded to a
+    shape bucket."""
     return blocks.kv_swap_out(cache, page_ids)
 
 
-def swap_in_pages(cache: dict, page_ids: jax.Array, ks: jax.Array,
-                  vs: jax.Array) -> dict:
+def swap_in_pages(cache: dict, page_ids: jax.Array, *payloads: jax.Array
+                  ) -> dict:
     """Scatter prefetched page payloads back into the hot pool; the caller
     remaps the owning slot's block-table row to the new pids."""
-    return blocks.kv_swap_in(cache, page_ids, ks, vs)
+    return blocks.kv_swap_in(cache, page_ids, *payloads)
 
 
 def checkpoint_slot_state(cache: dict, slot: int):
@@ -549,8 +601,14 @@ def kv_page_bytes(cfg: ModelConfig, page_size: int,
     """Bytes one KV page moves across the NAND channels when spilled or
     prefetched — per-family: full K/V for GQA pools, the compressed
     ckv+krope rows for MLA, shared-attention groups only for hybrid
-    (``serving.kv_cache.kv_page_elems`` is the single source of truth)."""
-    from repro.serving.kv_cache import kv_page_elems
+    (``serving.kv_cache.kv_page_elems`` is the single source of truth).
+    int8 pages carry 1-byte elements plus their f32 per-row scales
+    (``kv_page_scale_elems``) — a ~2x reduction vs bf16 for typical head
+    dims, which is what reprices spill/TTFT in ``sim.llm_perf``."""
+    from repro.serving.kv_cache import kv_page_elems, kv_page_scale_elems
+    if jnp.dtype(dtype) == jnp.int8:
+        return (kv_page_elems(cfg, page_size)
+                + 4 * kv_page_scale_elems(cfg, page_size))
     return kv_page_elems(cfg, page_size) * jnp.dtype(dtype).itemsize
 
 
@@ -695,6 +753,16 @@ def prefill_into_slots(params: dict, cfg: ModelConfig, tokens: jax.Array,
         return arr.reshape(arr.shape[0], m, n_pages, page,
                            *arr.shape[3:]).astype(pool.dtype)
 
+    def set_pool(key, arr):
+        # write one pool's prefill rows; int8 pools quantize per row HERE
+        # (the write) so the page bits depend only on the token span
+        sk = key + "_scale"
+        if sk in cache:
+            q, sc = attention.quantize_rows(arr)
+            return {key: cache[key].at[:, pids].set(to_pages(q, cache[key])),
+                    sk: cache[sk].at[:, pids].set(to_pages(sc, cache[sk]))}
+        return {key: cache[key].at[:, pids].set(to_pages(arr, cache[key]))}
+
     f = cfg.family
     if f in ("dense", "vlm", "moe"):
         layer_full = _moe_layer_full if f == "moe" else _dense_layer_full
@@ -705,9 +773,7 @@ def prefill_into_slots(params: dict, cfg: ModelConfig, tokens: jax.Array,
             return h, (k, v)
 
         x, (ks, vs) = ctx.scan(step, x, (params["layers"], None))
-        cache = {**cache,
-                 "k": cache["k"].at[:, pids].set(to_pages(ks, cache["k"])),
-                 "v": cache["v"].at[:, pids].set(to_pages(vs, cache["v"]))}
+        cache = {**cache, **set_pool("k", ks), **set_pool("v", vs)}
     elif f == "mla_moe":
         # page the COMPRESSED cache: ckv [L, M, S, R] + krope [L, M, S, Dr]
         def dstep(h, lp):
@@ -722,11 +788,7 @@ def prefill_into_slots(params: dict, cfg: ModelConfig, tokens: jax.Array,
         x, (ckv_m, kr_m) = ctx.scan(mstep, x, params["layers"])
         ckv = jnp.concatenate([ckv_d, ckv_m], 0)
         krope = jnp.concatenate([kr_d, kr_m], 0)
-        cache = {**cache,
-                 "ckv": cache["ckv"].at[:, pids].set(
-                     to_pages(ckv, cache["ckv"])),
-                 "krope": cache["krope"].at[:, pids].set(
-                     to_pages(krope, cache["krope"]))}
+        cache = {**cache, **set_pool("ckv", ckv), **set_pool("krope", krope)}
     elif f == "hybrid":
         # right-padded rows: the SSM recurrence (unlike causal attention)
         # would fold trailing pads into the state, so pad positions get
@@ -762,8 +824,7 @@ def prefill_into_slots(params: dict, cfg: ModelConfig, tokens: jax.Array,
             lambda pool, row: pool.at[:, :, slot_ids].set(
                 row.astype(pool.dtype)), cache["mamba"], mcaches)
         cache = {**cache, "mamba": mamba_pool, "tail": tail_cache,
-                 "k": cache["k"].at[:, pids].set(to_pages(ks, cache["k"])),
-                 "v": cache["v"].at[:, pids].set(to_pages(vs, cache["v"]))}
+                 **set_pool("k", ks), **set_pool("v", vs)}
     else:
         raise ValueError(f)
     cache = {**cache, "lens": cache["lens"].at[slot_ids].set(true_lens)}
@@ -845,8 +906,10 @@ def prefill_chunk_into_slot(params: dict, cfg: ModelConfig,
         return h, (kp, vp)
 
     x, (ks, vs) = ctx.scan(step, x,
-                           (params["layers"], cache["k"], cache["v"]))
-    cache = {**cache, "k": ks, "v": vs,
+                           (params["layers"], _pool(cache, "k"),
+                            _pool(cache, "v")))
+    cache = {**cache, **_pool_update(cache, "k", ks),
+             **_pool_update(cache, "v", vs),
              "lens": cache["lens"].at[slot].set(
                  jnp.asarray(start + chunk_len, jnp.int32))}
     idx = jnp.clip(chunk_len - 1, 0, c - 1).reshape(1, 1, 1)
@@ -897,8 +960,10 @@ def decode_step_paged(params: dict, cfg: ModelConfig, token: jax.Array,
             return h, (kp, vp)
 
         x, (ks, vs) = ctx.scan(step, x,
-                               (params["layers"], cache["k"], cache["v"]))
-        cache = {**cache, "k": ks, "v": vs}
+                               (params["layers"], _pool(cache, "k"),
+                                _pool(cache, "v")))
+        cache = {**cache, **_pool_update(cache, "k", ks),
+                 **_pool_update(cache, "v", vs)}
     elif f == "mla_moe":
         def make_step(dense):
             def step(h, xs):
@@ -916,15 +981,18 @@ def decode_step_paged(params: dict, cfg: ModelConfig, token: jax.Array,
                 return h, (ckv_p, kr_p)
             return step
         kd = cfg.first_k_dense
+        ckv_pool, kr_pool = _pool(cache, "ckv"), _pool(cache, "krope")
         x, (ckv_d, kr_d) = ctx.scan(
             make_step(True), x,
-            (params["dense_layers"], cache["ckv"][:kd], cache["krope"][:kd]))
+            (params["dense_layers"], _pool_slice(ckv_pool, slice(None, kd)),
+             _pool_slice(kr_pool, slice(None, kd))))
         x, (ckv_m, kr_m) = ctx.scan(
             make_step(False), x,
-            (params["layers"], cache["ckv"][kd:], cache["krope"][kd:]))
+            (params["layers"], _pool_slice(ckv_pool, slice(kd, None)),
+             _pool_slice(kr_pool, slice(kd, None))))
         cache = {**cache,
-                 "ckv": jnp.concatenate([ckv_d, ckv_m], 0),
-                 "krope": jnp.concatenate([kr_d, kr_m], 0)}
+                 **_pool_update(cache, "ckv", _pool_concat(ckv_d, ckv_m)),
+                 **_pool_update(cache, "krope", _pool_concat(kr_d, kr_m))}
     elif f == "hybrid":
         # Mamba state updates are masked by ``active`` (a suspended slot's
         # conv window and SSM state stay bit-identical until resume) and the
@@ -951,13 +1019,15 @@ def decode_step_paged(params: dict, cfg: ModelConfig, token: jax.Array,
 
         x, (mcaches, ks, vs) = ctx.scan(
             group_step, x,
-            (params["groups"], cache["mamba"], cache["k"], cache["v"]))
+            (params["groups"], cache["mamba"], _pool(cache, "k"),
+             _pool(cache, "v")))
         tail_cache = cache["tail"]
         if params.get("tail") is not None:
             x, tail_cache = ctx.scan(mamba_step, x,
                                      (params["tail"], cache["tail"]))
         cache = {**cache, "mamba": mcaches, "tail": tail_cache,
-                 "k": ks, "v": vs}
+                 **_pool_update(cache, "k", ks),
+                 **_pool_update(cache, "v", vs)}
     else:
         raise ValueError(f)
     cache = {**cache, "lens": lens + active.astype(jnp.int32)}

@@ -1,9 +1,14 @@
-"""Convert float model params to W8A8 serving form (paper's deployment mode).
+"""Convert float model params to quantized serving form (paper's deployment
+mode).
 
-Every linear param dict ``{"w": [..., in, out]}`` becomes
-``{"w_q": int8 [..., out, in], "scale": f32 [..., out]}`` (bias preserved).
-Kept in bf16 (documented): embeddings (row-gather, also the tied LM head),
-MoE routed-expert stacks (ragged_dot path), mamba conv/ssm vectors, norms.
+Every linear param dict ``{"w": [..., in, out]}`` becomes, for
+``mode="w8a8"``, ``{"w_q": int8 [..., out, in], "scale": f32 [..., out]}``
+and, for ``mode="w4a16"``, ``{"w_p4": uint8 [out, in//2], "scale4": f32
+[out, ng]}`` (bias preserved in both). Kept in bf16 (documented):
+embeddings (row-gather, also the tied LM head), MoE routed-expert stacks
+(ragged_dot path), mamba conv/ssm vectors, norms — and routers, exempted by
+*path* so a router nested anywhere in the tree (e.g. under a layer list)
+stays full precision.
 """
 
 from __future__ import annotations
@@ -20,21 +25,47 @@ def _quantize_w(w: jax.Array) -> dict:
     return {"w_q": w_q, "scale": scale.astype(jnp.float32)}
 
 
-def quantize_params(params):
-    """Recursively rewrite linear dicts into W8A8 form.
+def _quantize_w4(w: jax.Array) -> dict:
+    from repro.quant.int4 import quantize_weight4
 
-    Routers stay full precision (routing decisions are notoriously
-    quantization-sensitive; their weights are negligible)."""
+    wt = jnp.swapaxes(w.astype(jnp.float32), -1, -2)  # [out, in]
+    if wt.ndim != 2 or wt.shape[-1] % 2:
+        return _quantize_w(w)  # stacked/odd-width weights fall back to W8A8
+    q = quantize_weight4(wt)
+    return {"w_p4": q.w_packed, "scale4": q.scale}
+
+
+def _path_exempt(path: tuple) -> bool:
+    """True if any dict key on the path marks a quantization-exempt subtree
+    (routing decisions are notoriously quantization-sensitive; their
+    weights are negligible)."""
+    return any(isinstance(p, str) and p == "router" for p in path)
+
+
+def quantize_params(params, mode: str = "w8a8", _path: tuple = ()):
+    """Recursively rewrite linear dicts into quantized form.
+
+    ``mode`` selects ``"w8a8"`` (int8 weights + dynamic per-token int8
+    activations) or ``"w4a16"`` (packed-nibble weights, group-wise scales,
+    16-bit activations). Exemption is by path predicate, so routers keep
+    full precision no matter how deep in a list/tuple they sit.
+    """
+    if mode not in ("w8a8", "w4a16"):
+        raise ValueError(f"unknown quantization mode: {mode!r}")
+    if _path_exempt(_path):
+        return params
     if isinstance(params, dict):
         if "w" in params and isinstance(params["w"], (jax.Array, jax.ShapeDtypeStruct)) \
                 and getattr(params["w"], "ndim", 0) >= 2:
-            out = _quantize_w(params["w"])
+            qfn = _quantize_w if mode == "w8a8" else _quantize_w4
+            out = qfn(params["w"])
             for k, v in params.items():
                 if k != "w":
                     out[k] = v
             return out
-        return {k: (v if k == "router" else quantize_params(v))
+        return {k: quantize_params(v, mode, _path + (k,))
                 for k, v in params.items()}
     if isinstance(params, (list, tuple)):
-        return type(params)(quantize_params(v) for v in params)
+        return type(params)(quantize_params(v, mode, _path + (i,))
+                            for i, v in enumerate(params))
     return params

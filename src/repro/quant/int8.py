@@ -1,6 +1,8 @@
 """W8A8 symmetric quantization (paper default; SmoothQuant-style offline).
 
-Per-output-channel weight scales; per-tensor dynamic activation scale.
+Per-output-channel weight scales; per-column (per-token) dynamic activation
+scale — a single per-tensor scale would let one outlier token crush the
+quantization resolution of every other column in a batched ``x [w, b]``.
 All computations accumulate in int32 and dequantize at the end, mirroring the
 flash compute core's INT8 MACs (paper §IV-B).
 """
@@ -27,9 +29,19 @@ def quantize_weight(w: jax.Array) -> QuantizedLinear:
 
 
 def quantize_activation(x: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """x: [..., w] float -> (int8, per-tensor scale)."""
-    absmax = jnp.max(jnp.abs(x))
-    scale = jnp.maximum(absmax / 127.0, 1e-8)
+    """x: [w] or [w, b] float -> (int8, per-column scale).
+
+    1-D inputs get a scalar scale; batched [w, b] inputs get one scale per
+    column b (absmax over the contraction axis 0), so an outlier token only
+    costs itself resolution."""
+    if x.ndim <= 1:
+        absmax = jnp.max(jnp.abs(x))
+    else:
+        absmax = jnp.max(jnp.abs(x), axis=0)
+    # explicit reciprocal multiply: XLA rewrites constant division to it
+    # under jit, so spelling it out keeps eager and jitted callers
+    # bit-identical (the kernel-vs-ref parity tests compare across both)
+    scale = jnp.maximum(absmax * jnp.float32(1.0 / 127.0), 1e-8)
     x_q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
     return x_q, scale.astype(jnp.float32)
 
@@ -44,7 +56,9 @@ def int8_matvec(q: QuantizedLinear, x: jax.Array) -> jax.Array:
     acc = jax.lax.dot_general(
         q.w_q.astype(jnp.int32), x_q.astype(jnp.int32),
         (((1,), (0,)), ((), ())))
-    return acc.astype(jnp.float32) * q.scale * x_scale
+    if x.ndim <= 1:
+        return acc.astype(jnp.float32) * q.scale * x_scale
+    return acc.astype(jnp.float32) * q.scale[:, None] * x_scale[None, :]
 
 
 def quantization_mse(w: jax.Array) -> jax.Array:

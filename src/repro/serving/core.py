@@ -252,9 +252,11 @@ class SlotSnapshot:
     """One slot's entire serving state as host arrays — the migration wire
     format.
 
-    ``pages[j]`` is the ``(k, v)`` payload pair of the slot's j-th
-    allocated page exactly as ``swap_out_pages`` gathers it (for MLA the
-    pair is the compressed ``(ckv, krope)`` rows); ``ssm`` is the
+    ``pages[j]`` is the payload tuple of the slot's j-th allocated page
+    exactly as ``swap_out_pages`` gathers it — one numpy array per
+    ``paged_pool_keys`` component: ``(k, v)`` for bf16 pools (for MLA the
+    compressed ``(ckv, krope)`` rows), and ``(k, v, k_scale, v_scale)``
+    under ``kv_dtype="int8"``; ``ssm`` is the
     ``checkpoint_slot_state`` snapshot for families with per-slot recurrent
     state.  Everything here is numpy / plain python — serializing this
     struct across a socket IS the future cross-host slot move; no device
@@ -266,7 +268,7 @@ class SlotSnapshot:
     last_token: int        # next decode step's input token
     prefilling: bool       # still mid chunked-prefill
     prefill_pos: int
-    pages: list            # [(k_page, v_page) numpy arrays] per page
+    pages: list            # [tuple of numpy arrays] per page (pool order)
     ssm: object            # checkpoint_slot_state payload (None if none)
     page_size: int
     family: str
@@ -388,7 +390,9 @@ def _jit_decode_sample(cfg: ModelConfig, donate: bool):
 
 
 class _LazyPagePayload:
-    """A spilled page's ``(k, v)`` payload still on its way to the host.
+    """A spilled page's payload still on its way to the host — one array
+    per ``paged_pool_keys`` component ((k, v) for bf16 pools, (k, v,
+    k_scale, v_scale) under kv_dtype="int8").
 
     ``copy_to_host_async`` starts the device→host DMA at spill time; the
     numpy materialization happens only when the payload is actually needed
@@ -396,18 +400,18 @@ class _LazyPagePayload:
     blocks the engine loop on a device sync.
     """
 
-    __slots__ = ("k", "v")
+    __slots__ = ("arrays",)
 
-    def __init__(self, k, v):
-        self.k, self.v = k, v
-        k.copy_to_host_async()
-        v.copy_to_host_async()
+    def __init__(self, *arrays):
+        self.arrays = arrays
+        for a in arrays:
+            a.copy_to_host_async()
 
-    def materialize(self) -> tuple[np.ndarray, np.ndarray]:
-        return np.asarray(self.k), np.asarray(self.v)
+    def materialize(self) -> tuple[np.ndarray, ...]:
+        return tuple(np.asarray(a) for a in self.arrays)
 
 
-def _payload_np(payload) -> tuple[np.ndarray, np.ndarray]:
+def _payload_np(payload) -> tuple[np.ndarray, ...]:
     if isinstance(payload, _LazyPagePayload):
         return payload.materialize()
     return payload
@@ -516,7 +520,8 @@ class EngineCore:
                  kv_tier: str = "none", exhaust_policy: str = "requeue",
                  flash_pages: Optional[int] = None,
                  scheduler: "Scheduler | str | None" = None,
-                 overlap: bool = False, prefix_cache: bool = False):
+                 overlap: bool = False, prefix_cache: bool = False,
+                 kv_dtype: str = "bf16"):
         if overlap and watchdog is not None:
             raise ValueError(
                 "overlap=True keeps one decode step in flight past the host "
@@ -532,6 +537,11 @@ class EngineCore:
                 f"cursor — use mode='wave'")
         if kv_tier not in ("none", "flash"):
             raise ValueError(f"kv_tier {kv_tier!r} not in ('none', 'flash')")
+        if kv_dtype not in ("bf16", "int8"):
+            raise ValueError(f"kv_dtype {kv_dtype!r} not in ('bf16', 'int8')")
+        if kv_dtype == "int8" and mode != "continuous":
+            raise ValueError("kv_dtype='int8' needs mode='continuous' (only "
+                             "the paged pools quantize per page row)")
         if exhaust_policy not in ("requeue", "reject"):
             raise ValueError(f"exhaust_policy {exhaust_policy!r}")
         if kv_tier == "flash" and mode != "continuous":
@@ -556,6 +566,7 @@ class EngineCore:
         self._inflight: list[int] = [0] * max_batch
         self._slot_epoch: list[int] = [0] * max_batch
         self.kv_tier = kv_tier
+        self.kv_dtype = kv_dtype
         self.exhaust_policy = exhaust_policy
         self.scheduler = make_scheduler(scheduler)
         self.stats = EngineStats(mode=mode, policy=self.scheduler.name)
@@ -572,7 +583,7 @@ class EngineCore:
             self.num_pages = full_pool if num_pages is None else num_pages
             self.cache = model_lib.init_paged_cache(
                 cfg, max_batch, max_seq, page_size=page_size,
-                num_pages=self.num_pages)
+                num_pages=self.num_pages, kv_dtype=kv_dtype)
             self.kv_page_bytes = model_lib.kv_page_bytes(
                 cfg, page_size, model_lib.paged_pool_dtype(self.cache))
             # hybrid: per-slot Mamba state checkpoints, filled on suspend
@@ -1015,36 +1026,38 @@ class EngineCore:
         n = prefill_bucket(len(pids), floor=1)
         return np.asarray(pids + [0] * (n - len(pids)), np.int32)
 
-    def _gather_pages(self, pids: list[int]
-                      ) -> list[tuple[np.ndarray, np.ndarray]]:
-        """Gather hot pages as per-page ``(k, v)`` host payload pairs — ONE
+    def _gather_pages(self, pids: list[int]) -> list[tuple[np.ndarray, ...]]:
+        """Gather hot pages as per-page host payload tuples (one array per
+        pool component — (k, v), plus scale payloads when int8) — ONE
         bucketed ``swap_out_pages`` call; each column is copied out so a
         payload doesn't pin the whole bucket buffer.  The payload format is
         shared by the flash tier's cold store and the migration snapshot."""
-        ks, vs = _jit_swap_out(self.cache, self._bucket_pids(pids))
-        ks, vs = np.asarray(ks), np.asarray(vs)
-        return [(ks[:, j].copy(), vs[:, j].copy())
+        arrays = [np.asarray(a)
+                  for a in _jit_swap_out(self.cache, self._bucket_pids(pids))]
+        return [tuple(a[:, j].copy() for a in arrays)
                 for j in range(len(pids))]
 
     def _scatter_pages(self, pids: list[int], payloads: list) -> None:
-        """Scatter per-page ``(k, v)`` payloads onto freshly allocated hot
-        pids — ONE bucketed ``swap_in_pages`` call (null-page padded); the
-        caller remaps the owning block-table row.  Shared by tier prefetch
-        and migration inject."""
+        """Scatter per-page payload tuples onto freshly allocated hot pids —
+        ONE bucketed ``swap_in_pages`` call (null-page padded); the caller
+        remaps the owning block-table row.  Shared by tier prefetch and
+        migration inject."""
         payloads = [_payload_np(p) for p in payloads]
-        ks = np.stack([p[0] for p in payloads], axis=1)
-        vs = np.stack([p[1] for p in payloads], axis=1)
+        comps = [np.stack([p[c] for p in payloads], axis=1)
+                 for c in range(len(payloads[0]))]
         bpids = self._bucket_pids(pids)
         pad = len(bpids) - len(pids)
         if pad:
-            widths = [(0, 0)] * ks.ndim
-            widths[1] = (0, pad)
-            ks, vs = np.pad(ks, widths), np.pad(vs, widths)
+            def padded(a):
+                widths = [(0, 0)] * a.ndim
+                widths[1] = (0, pad)
+                return np.pad(a, widths)
+            comps = [padded(a) for a in comps]
         # device_put starts the host→device transfer asynchronously; the
         # swap_in scatter then composes with it by dataflow instead of the
         # jit call blocking on an implicit synchronous upload
-        self.cache = _jit_swap_in(self.cache, bpids, jax.device_put(ks),
-                                  jax.device_put(vs))
+        self.cache = _jit_swap_in(self.cache, bpids,
+                                  *(jax.device_put(a) for a in comps))
 
     def _spill(self, items: list[tuple[tuple[int, int], int]]) -> int:
         """Swap ``(key=(slot, page_idx), pid)`` hot pages out to flash;
@@ -1073,9 +1086,10 @@ class EngineCore:
         # payloads: the device→host copies run asynchronously and only
         # materialize when prefetch / snapshot actually reads them, so a
         # spill never stalls the loop behind a blocking gather
-        ks, vs = _jit_swap_out(self.cache, self._bucket_pids(pids))
+        arrays = _jit_swap_out(self.cache, self._bucket_pids(pids))
         for j, (key, _pid) in enumerate(items):
-            self.allocator.store(key, _LazyPagePayload(ks[:, j], vs[:, j]))
+            self.allocator.store(
+                key, _LazyPagePayload(*(a[:, j] for a in arrays)))
             if key[0] == "px":
                 # an idle cached-prefix page going cold: no block-table row
                 # to clear, just the index residency flip
@@ -1223,6 +1237,14 @@ class EngineCore:
                 return ("resume", rent)
             self._px.drop_resume(rkey)
         if not self._chunk_ok:
+            return None
+        if self.kv_dtype == "int8":
+            # a partial hit prefills only the uncached suffix through the
+            # chunk path; under int8 pools the full-prompt one-shot prefill
+            # and the chunked suffix replay agree only to quantization
+            # precision, so partial reuse would break the "a prompt's pages
+            # are a pure function of its tokens" sharing contract.  Resume
+            # hits stay: they replay stored bits exactly.
             return None
         keys = self._px.page_keys(kt)
         # cap so at least one token remains to prefill: the suffix chunk is

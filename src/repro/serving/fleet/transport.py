@@ -229,6 +229,7 @@ def spawn_worker(arch: str, *, reduced: bool = True, max_batch: int = 4,
                  num_pages: int = 0, kv_tier: str = "none",
                  overlap: bool = False, policy: str = "fcfs",
                  chunk_prefill: int = 0, seed: int = 0,
+                 kv_dtype: str = "bf16", quant: str = "none",
                  startup_timeout_s: float = 300.0) -> SocketTransport:
     """Launch ``python -m repro.serving.fleet.worker`` and connect to it.
 
@@ -250,7 +251,8 @@ def spawn_worker(arch: str, *, reduced: bool = True, max_batch: int = 4,
            "--max-seq", str(max_seq), "--page-size", str(page_size),
            "--eos-id", str(eos_id), "--num-pages", str(num_pages),
            "--kv-tier", kv_tier, "--policy", policy,
-           "--chunk-prefill", str(chunk_prefill), "--seed", str(seed)]
+           "--chunk-prefill", str(chunk_prefill), "--seed", str(seed),
+           "--kv-dtype", kv_dtype, "--quant", quant]
     if overlap:
         cmd.append("--overlap")
     proc = subprocess.Popen(cmd, stdout=subprocess.PIPE,

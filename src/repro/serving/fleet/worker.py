@@ -155,7 +155,8 @@ def build_core(arch: str, *, reduced: bool = True, max_batch: int = 4,
                max_seq: int = 128, page_size: int = 16, eos_id: int = -1,
                num_pages: int = 0, kv_tier: str = "none",
                overlap: bool = False, policy: str = "fcfs",
-               chunk_prefill: int = 0, seed: int = 0) -> EngineCore:
+               chunk_prefill: int = 0, seed: int = 0,
+               kv_dtype: str = "bf16", quant: str = "none") -> EngineCore:
     import jax
 
     from repro.configs.registry import get_arch
@@ -167,10 +168,15 @@ def build_core(arch: str, *, reduced: bool = True, max_batch: int = 4,
         cfg = cfg.reduced()
     params = model_lib.init_params(cfg, jax.random.PRNGKey(seed),
                                    max_seq=max_seq)
+    if quant != "none":
+        # quantize AFTER the deterministic init so every worker of a fleet
+        # derives bit-identical quantized weights from (arch, seed)
+        from repro.quant.convert import quantize_params
+        params = quantize_params(params, mode=quant)
     return EngineCore(
         cfg, params, max_batch=max_batch, max_seq=max_seq, eos_id=eos_id,
         page_size=page_size, num_pages=num_pages or None, kv_tier=kv_tier,
-        overlap=overlap,
+        overlap=overlap, kv_dtype=kv_dtype,
         scheduler=make_scheduler(policy, chunk_tokens=chunk_prefill or None))
 
 
@@ -187,6 +193,9 @@ def main(argv=None) -> None:
     ap.add_argument("--eos-id", type=int, default=-1)
     ap.add_argument("--num-pages", type=int, default=0)
     ap.add_argument("--kv-tier", default="none", choices=("none", "flash"))
+    ap.add_argument("--kv-dtype", default="bf16", choices=("bf16", "int8"))
+    ap.add_argument("--quant", default="none",
+                    choices=("none", "w8a8", "w4a16"))
     ap.add_argument("--overlap", action="store_true")
     ap.add_argument("--policy", default="fcfs")
     ap.add_argument("--chunk-prefill", type=int, default=0)
@@ -199,7 +208,8 @@ def main(argv=None) -> None:
         max_seq=args.max_seq, page_size=args.page_size, eos_id=args.eos_id,
         num_pages=args.num_pages, kv_tier=args.kv_tier,
         overlap=args.overlap, policy=args.policy,
-        chunk_prefill=args.chunk_prefill, seed=args.seed)
+        chunk_prefill=args.chunk_prefill, seed=args.seed,
+        kv_dtype=args.kv_dtype, quant=args.quant)
     serve(WorkerHost(core, name=args.name), port=args.port)
 
 

@@ -467,6 +467,23 @@ def kv_page_elems(cfg, page_size: int) -> int:
     raise ValueError(f"family {f!r} has no paged KV cache")
 
 
+def kv_page_scale_elems(cfg, page_size: int) -> int:
+    """f32 scale elements one int8 KV page carries next to its payload —
+    one symmetric scale per page row per head (GQA pools) or per compressed
+    row (MLA's ckv + krope), i.e. the pool shapes minus their last axis.
+    ``models.model.kv_page_bytes`` prices an int8 page as
+    ``kv_page_elems * 1 + kv_page_scale_elems * 4``."""
+    f = cfg.family
+    if f == "mla_moe":
+        return 2 * cfg.n_layers * page_size
+    if f == "hybrid":
+        n_groups = cfg.n_layers // cfg.shared_attn_every
+        return 2 * n_groups * page_size * cfg.n_kv_heads
+    if f in ("dense", "vlm", "moe"):
+        return 2 * cfg.n_layers * page_size * cfg.n_kv_heads
+    raise ValueError(f"family {f!r} has no paged KV cache")
+
+
 def chunk_spans(n_tokens: int, budget: int) -> list[tuple[int, int]]:
     """Reference chunked-prefill schedule for a FIXED budget: ``(start,
     length)`` spans of at most ``budget`` tokens tiling the prompt.  The

@@ -80,10 +80,13 @@ class Router:
                     and c.eos_id == head.eos_id
                     and c.mode == head.mode
                     and getattr(c, "page_size", None)
-                    == getattr(head, "page_size", None))
+                    == getattr(head, "page_size", None)
+                    and getattr(c, "kv_dtype", None)
+                    == getattr(head, "kv_dtype", None))
             if not same:
-                raise ValueError("replicas must be homogeneous "
-                                 "(family/max_seq/eos_id/mode/page_size)")
+                raise ValueError(
+                    "replicas must be homogeneous "
+                    "(family/max_seq/eos_id/mode/page_size/kv_dtype)")
         self.policy = policy
         self.migrate = migrate and head.mode == "continuous"
         self.migrations = 0

@@ -190,14 +190,22 @@ def prefill_ttft_s(cfg: ModelConfig, flash: FlashSpec,
 
 
 def family_kv_page_bytes(cfg: ModelConfig, page_size: int,
-                         bytes_per_elem: float = 2.0) -> float:
+                         bytes_per_elem: float = 2.0,
+                         kv_dtype: str = "bf16") -> float:
     """Bytes one evicted KV page moves, per family — the MLA family spills
     compressed [page, d_ckv + d_krope] rows and the hybrid family only its
     shared-attention groups, so their tier traffic is a fraction of a
     same-sized dense model's.  Derives from the same element count the
     engine's ``kv_page_bytes`` uses (``serving.kv_cache.kv_page_elems``),
-    keeping the sim pricing honest with the live byte counters."""
-    from repro.serving.kv_cache import kv_page_elems
+    keeping the sim pricing honest with the live byte counters.
+
+    ``kv_dtype="int8"`` prices the quantized pools: one byte per element
+    plus the f32 per-row scale payloads (``kv_page_scale_elems``) that
+    spill alongside them — a ~2·Dh/(Dh+4) traffic reduction vs bf16."""
+    from repro.serving.kv_cache import kv_page_elems, kv_page_scale_elems
+    if kv_dtype == "int8":
+        return (kv_page_elems(cfg, page_size)
+                + 4.0 * kv_page_scale_elems(cfg, page_size))
     return kv_page_elems(cfg, page_size) * bytes_per_elem
 
 
