@@ -1,10 +1,10 @@
 # Convenience targets; CI runs the same commands (.github/workflows/ci.yml).
 
 .PHONY: test test-fast test-slow test-families test-fleet \
-	test-fleet-socket test-quant bench-serving bench-serving-smoke \
-	bench-serving-policy bench-serving-kvtier-mla bench-serving-router \
-	bench-serving-overlap bench-serving-prefix bench-serving-fleet \
-	bench-serving-quant
+	test-fleet-socket test-quant test-sanitize lint bench-serving \
+	bench-serving-smoke bench-serving-policy bench-serving-kvtier-mla \
+	bench-serving-router bench-serving-overlap bench-serving-prefix \
+	bench-serving-fleet bench-serving-quant bench-serving-sanitize
 
 # every family where supports_paged() is true — the serving conformance
 # matrix (test ids are fam_<family>, substring-safe: fam_moe != fam_mla_moe)
@@ -21,6 +21,22 @@ test-fast:
 # nightly tier: only the slow interpret-mode kernel sweeps
 test-slow:
 	python -m pytest -q -m slow
+
+# static analysis: the repo-specific hazard-class rules (reprolint) plus
+# ruff's baseline if it is installed (CI always installs it; the dev
+# container may not have it)
+lint:
+	PYTHONPATH=src python -m tools.analysis.reprolint src/ tests/
+	@command -v ruff >/dev/null 2>&1 \
+		&& ruff check src tests tools benchmarks \
+		|| echo "ruff not installed; skipped (reprolint ran)"
+
+# the analysis suite (rule fixture corpus + shadow-model properties) and
+# one serving family end-to-end with every sanitizer rail armed
+test-sanitize:
+	python -m pytest -x -q tests/test_analysis.py
+	REPRO_SANITIZE=1 python -m pytest -x -q tests/test_serving.py \
+		-m "not slow" -k fam_dense
 
 # cross-family serving conformance suite, one family at a time (mirrors the
 # CI family-matrix job): mid-stream-admission oracle, eos/max-token
@@ -119,3 +135,11 @@ bench-serving-fleet:
 bench-serving-quant:
 	PYTHONPATH=src python benchmarks/bench_serving.py --smoke \
 		--trace quant
+
+# sanitizer rails smoke: overlapped + tiered + prefix-cache decode under
+# REPRO_SANITIZE=1 (shadow allocators, dispatch aliasing guard, retrace
+# budget all armed) vs the identical plain engine — zero reports, rails
+# demonstrably exercised, bit-identical tokens, < 2x wall
+bench-serving-sanitize:
+	PYTHONPATH=src python benchmarks/bench_serving.py --smoke \
+		--trace sanitize

@@ -83,6 +83,7 @@ Run:  PYTHONPATH=src python benchmarks/bench_serving.py \
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import numpy as np
@@ -957,6 +958,99 @@ def bench_fleet(cfg, params, args) -> list[dict]:
     return rows
 
 
+def bench_sanitize(cfg, params, args) -> dict:
+    """Sanitizer-rails smoke: the overlapped + tiered + prefix-cache decode
+    path (every rail armed at once — shadow allocators, dispatch aliasing
+    guard, retrace budget) driven under ``REPRO_SANITIZE=1`` and raced
+    against the identical un-sanitized engine.  Asserts the rails actually
+    ran, reported nothing, changed no output token, and cost < 2x wall."""
+    from repro.serving.kv_cache import pages_needed
+
+    # the shared prefix must cover whole pages to be cacheable: two pages
+    # of system prompt + a short random tail per request
+    common_len = 2 * args.page_size
+    tail_len = 4
+    rng = np.random.RandomState(args.seed + 7)
+    common = rng.randint(0, cfg.vocab_size, size=common_len).tolist()
+    per_req = pages_needed(min(args.max_seq,
+                               common_len + tail_len + args.max_new),
+                           args.page_size)
+    pool = per_req + 1  # two concurrent requests exceed it even with the
+    # common pages deduped by the prefix cache, so the tier must spill
+
+    def trace(sanitized: bool) -> tuple[float, dict, object]:
+        prev = os.environ.get("REPRO_SANITIZE")
+        os.environ["REPRO_SANITIZE"] = "1" if sanitized else "0"
+        try:
+            kw = dict(mode="continuous", overlap=True, kv_tier="flash",
+                      num_pages=pool, prefix_cache=True)
+            _warm(cfg, params, args, **kw)
+            eng = ServingEngine(cfg, params, max_batch=args.max_batch,
+                                max_seq=args.max_seq, eos_id=-1,
+                                page_size=args.page_size, **kw)
+            # shared system-prompt prefix + random tail: requests hit the
+            # prefix cache against each other, so the refcounted/CoW page
+            # path runs under the shadow allocator too
+            req_rng = np.random.RandomState(args.seed + 8)
+            reqs = [Request(rid=rid, prompt=common + req_rng.randint(
+                        0, cfg.vocab_size, size=tail_len).tolist(),
+                        max_new_tokens=args.max_new)
+                    for rid in range(args.requests)]
+            # everything arrives at once: max concurrency, so the tight
+            # pool actually forces spill/prefetch traffic under the shadow
+            arrivals = np.zeros(args.requests)
+            wall = drive(eng, reqs, arrivals)
+            assert all(r.done and not r.rejected for r in reqs)
+            outs = {r.rid: list(r.out_tokens) for r in reqs}
+            return wall, outs, eng
+        finally:
+            if prev is None:
+                os.environ.pop("REPRO_SANITIZE", None)
+            else:
+                os.environ["REPRO_SANITIZE"] = prev
+
+    print(f"\n[sanitize] arch={cfg.name} requests={args.requests} "
+          f"hot_pool={pool} pages, overlapped+tiered+prefix, rails armed")
+    from repro import _sanitize
+    prev = os.environ.get("REPRO_SANITIZE")
+    os.environ["REPRO_SANITIZE"] = "1"   # load() gates on the env var
+    try:
+        san = _sanitize.load()
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_SANITIZE", None)
+        else:
+            os.environ["REPRO_SANITIZE"] = prev
+    assert san is not None, "tools.analysis.sanitize not importable"
+    trace(sanitized=False)  # discarded: first pass pays the jit compiles
+    plain_wall, plain_outs, _ = trace(sanitized=False)
+    san.reset_counters()
+    san_wall, san_outs, eng = trace(sanitized=True)
+
+    assert san.report_count() == 0, \
+        f"sanitizer reported {san.report_count()} violation(s) on a clean run"
+    assert san.check_count() > 0, "rails never executed — hooks are dead"
+    assert getattr(eng.allocator, "_shadow", None) is not None or \
+        getattr(getattr(eng.allocator, "hot", None), "_shadow", None) \
+        is not None, "page shadow not attached"
+    assert san_outs == plain_outs, \
+        "sanitized run changed output tokens — rails must be pure observers"
+    slowdown = san_wall / max(plain_wall, 1e-9)
+    print(f"{'variant':>10} {'wall_s':>8} {'checks':>8} {'reports':>8}")
+    print(f"{'plain':>10} {plain_wall:>8.2f} {'-':>8} {'-':>8}")
+    print(f"{'sanitized':>10} {san_wall:>8.2f} {san.check_count():>8d} "
+          f"{san.report_count():>8d}")
+    print(f"[sanitize] slowdown {slowdown:.2f}x "
+          f"(spill={eng.stats.kv_spill_pages} pages, "
+          f"prefetch={eng.stats.kv_prefetch_pages} pages, "
+          f"prefix_hits={eng.stats.prefix_hits})")
+    assert slowdown < 2.0, \
+        f"sanitizer slowdown {slowdown:.2f}x breaches the 2x budget"
+    return {"wall_plain_s": plain_wall, "wall_sanitized_s": san_wall,
+            "slowdown": slowdown, "checks": san.check_count(),
+            "reports": san.report_count()}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
@@ -985,7 +1079,8 @@ def main(argv=None):
                          "workers, SIGKILLed mid-trace)")
     ap.add_argument("--trace", choices=("admission", "overlap", "kvtier",
                                         "policy", "prefix", "router",
-                                        "quant", "fleet", "all"),
+                                        "quant", "fleet", "sanitize",
+                                        "all"),
                     default="all")
     ap.add_argument("--overlap", action="store_true",
                     help="run the admission trace's continuous engine with "
@@ -1028,6 +1123,8 @@ def main(argv=None):
         out["quant"] = bench_quant(cfg, params, args)
     if args.trace in ("fleet", "all"):
         out["fleet"] = bench_fleet(cfg, params, args)
+    if args.trace in ("sanitize", "all"):
+        out["sanitize"] = bench_sanitize(cfg, params, args)
     return out
 
 

@@ -68,7 +68,6 @@ def fig10_ecc_accuracy():
     import jax
     import jax.numpy as jnp
 
-    from repro.configs.registry import ASSIGNED_ARCHS
     from repro.core.hw import CAMBRICON_LLM_S
     from repro.core.hybrid_gemv import (corrupt_flash_region, hybrid_gemv,
                                         plan_and_quantize)

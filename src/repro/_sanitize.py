@@ -1,0 +1,40 @@
+"""Bridge from ``src/repro`` to the optional sanitizer rails.
+
+The serving hot paths call :func:`load` and get either the
+``tools.analysis.sanitize`` module or ``None``; everything downstream is
+gated on that, so a checkout without ``tools/`` (or with
+``REPRO_SANITIZE`` unset) pays one ``os.environ`` lookup and nothing else.
+
+``tools`` is importable under pytest (the repo root is the rootdir) but
+not from standalone scripts run as ``PYTHONPATH=src python ...``, so the
+bridge bootstraps the repo root onto ``sys.path`` when needed.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+
+
+def enabled() -> bool:
+    return os.environ.get("REPRO_SANITIZE", "") not in ("", "0")
+
+
+def load():
+    """Return the sanitize module when rails are enabled, else ``None``."""
+    if not enabled():
+        return None
+    try:
+        from tools.analysis import sanitize
+    except ImportError:
+        if _REPO_ROOT in sys.path:
+            return None
+        sys.path.insert(0, _REPO_ROOT)
+        try:
+            from tools.analysis import sanitize
+        except ImportError:
+            return None
+    return sanitize

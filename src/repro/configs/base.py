@@ -8,7 +8,6 @@ sharding rules (distributed/sharding.py) and the dry-run launcher.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)

@@ -2,7 +2,7 @@
 
 from __future__ import annotations
 
-from repro.configs.base import (ALL_SHAPES, SHAPES, InputShape, ModelConfig,
+from repro.configs.base import (ALL_SHAPES, InputShape, ModelConfig,
                                 shape_applicable)
 from repro.configs.chatglm3_6b import CONFIG as CHATGLM3_6B
 from repro.configs.command_r_plus_104b import CONFIG as COMMAND_R_PLUS_104B

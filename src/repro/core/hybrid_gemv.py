@@ -19,7 +19,7 @@ import jax.numpy as jnp
 from repro.core import ecc as ecc_mod
 from repro.core import tiling
 from repro.core.hw import FlashSpec
-from repro.quant.int8 import QuantizedLinear, quantize_weight
+from repro.quant.int8 import quantize_weight
 
 
 class HybridWeights(NamedTuple):

@@ -10,7 +10,6 @@ event-driven channel simulator for the faithful numbers.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable
 
 from repro.configs.base import ModelConfig
 from repro.core.hw import FlashSpec, NPUSpec

@@ -11,7 +11,6 @@ restarted job resumes mid-stream deterministically.
 
 from __future__ import annotations
 
-import dataclasses
 import json
 import os
 import shutil

@@ -13,7 +13,6 @@ with every Wi sharded over ``axis`` and gathered one step ahead.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -61,7 +61,8 @@ def main():
                         or "cost" in rec):
                     print(f"[cached] {(arch, shape, mesh)}", flush=True)
                     continue
-            except Exception:
+            except (OSError, ValueError):
+                # corrupt or partial cache record: fall through and re-run
                 pass
         while len(procs) >= args.jobs:
             reap(block=True)

@@ -6,7 +6,6 @@ allocation ever happens in the dry-run (the shannon/kernels pattern).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -12,7 +12,6 @@ see EXPERIMENTS.md §Perf for the accounting).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

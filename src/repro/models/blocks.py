@@ -7,7 +7,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.kernels.compat import shard_map
-from repro.models.attention import (_repeat_kv, chunked_attention,
+from repro.models.attention import (chunked_attention,
                                     decode_attention, gather_paged_rows,
                                     paged_chunk_attention,
                                     paged_decode_attention,

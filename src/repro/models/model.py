@@ -35,7 +35,6 @@ into a shared page pool, so any slot can prefill/decode/free independently.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -43,7 +42,6 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.distributed import ctx
 from repro.models import attention, blocks, moe as moe_mod, ssm as ssm_mod
-from repro.models.attention import chunked_attention
 from repro.models.layers import (ffn, init_ffn, init_linear, linear,
                                  mrope_positions)
 

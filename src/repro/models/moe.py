@@ -28,7 +28,7 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.base import ModelConfig
 from repro.distributed import ctx
 from repro.kernels.compat import shard_map
-from repro.models.layers import dense_weight, init_linear, linear
+from repro.models.layers import init_linear, linear
 
 CAPACITY_FACTOR = 2.0
 

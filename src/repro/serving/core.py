@@ -156,6 +156,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.models import model as model_lib
 from repro.serving import sampler
+from repro import _sanitize
 from repro.serving.kv_cache import (OutOfPages, PageAllocator, PrefixIndex,
                                     ResumeEntry, TieredPageAllocator,
                                     pages_needed, prefill_bucket)
@@ -634,6 +635,7 @@ class EngineCore:
             self._decode_sample = (
                 _jit_decode_sample_paged(cfg, donate)
                 if mode == "continuous" else _jit_decode_sample(cfg, donate))
+        self._san = _sanitize.load()  # None unless REPRO_SANITIZE=1
 
     # ------------------------------------------------------------------
     # command surface: add / abort
@@ -1810,6 +1812,10 @@ class EngineCore:
             self._drain_rows(pend)
 
     def _drain_rows(self, pend: dict) -> None:
+        if self._san is not None and pend.get("san") is not None:
+            # the step is about to be read back: its numpy args must be
+            # bit-identical to what was dispatched (aliasing guard)
+            self._san.check_drain(pend["san"])
         tok_np = np.asarray(pend["tok"])  # blocks on THIS step only; any
         # younger dispatch keeps running behind it
         if self.mode == "continuous":
@@ -1866,13 +1872,24 @@ class EngineCore:
         # buffers zero-copy, so the async-executing step would otherwise read
         # ``last_np`` / ``block`` concurrently with the in-place mutations
         # the drain / spill below performs (a real, observed data race)
+        last_np = self.last_np.copy()
+        block = self.block.copy()
+        active = np.asarray(active_list)
         tok, cache = self._decode_sample(
-            self.params, self.last_np.copy(), tok_dev, use_dev,
-            {**self.cache, "block": self.block.copy()},
-            np.asarray(active_list), *sp_rows, greedy_only=greedy_only)
+            self.params, last_np, tok_dev, use_dev,
+            {**self.cache, "block": block},
+            active, *sp_rows, greedy_only=greedy_only)
         # wall_decode_s measures DISPATCH time here (the compute itself is
         # deliberately not awaited); bench wall clocks stay end-to-end
         self.stats.wall_decode_s += time.monotonic() - t0
+        san = None
+        if self._san is not None:
+            san = self._san.guard_dispatch(
+                self.stats.decode_steps, last_np=last_np, block=block,
+                use_dev=use_dev, active=active, seeds=sp_rows[0],
+                counts=sp_rows[1], temps=sp_rows[2], topk=sp_rows[3],
+                topp=sp_rows[4])
+            self._san.check_retrace(self._decode_sample, "decode_sample")
         cache.pop("block")  # authoritative copy stays host-side
         self.cache = cache
         self.stats.decode_steps += 1
@@ -1882,7 +1899,7 @@ class EngineCore:
             seq_after = self.slot_len[i] + self._inflight[i] + 1
             rows.append((i, req, seq_after, self._slot_epoch[i]))
             self._inflight[i] += 1
-        self._pending = {"tok": tok, "rows": rows}
+        self._pending = {"tok": tok, "rows": rows, "san": san}
         if old is not None:
             self._drain_rows(old)
 
@@ -2059,15 +2076,23 @@ class EngineCore:
         t0 = time.monotonic()
         # snapshot: CPU jit aliases numpy inputs zero-copy and the drain
         # below mutates ``_wave_last_np`` while this step is still running
+        wave_last = self._wave_last_np.copy()
         tok, cache = self._decode_sample(
-            self.params, self._wave_last_np.copy(), tok_dev, use_dev,
+            self.params, wave_last, tok_dev, use_dev,
             self.cache, *sp_rows, greedy_only=greedy_only)
         self.stats.wall_decode_s += time.monotonic() - t0
+        san = None
+        if self._san is not None:
+            san = self._san.guard_dispatch(
+                self.stats.decode_steps, wave_last=wave_last,
+                use_dev=use_dev, seeds=sp_rows[0], counts=sp_rows[1],
+                temps=sp_rows[2], topk=sp_rows[3], topp=sp_rows[4])
+            self._san.check_retrace(self._decode_sample, "decode_sample")
         self.cache = cache
         self.stats.decode_steps += 1
         self.stats.decode_dispatches += 1
         self._wave_len += 1
-        self._pending = {"tok": tok,
+        self._pending = {"tok": tok, "san": san,
                          "rows": [(i, r, self._wave_len) for i, r in items]}
         if old is not None:
             self._drain_rows(old)

@@ -54,6 +54,35 @@ class ProtocolError(RuntimeError):
     the receiver merely dislikes — those are application errors."""
 
 
+# The golden list of fields each serving dataclass puts on the wire.  The
+# codec itself is generic (``dataclasses.fields``), so a field added to a
+# dataclass ships automatically — but a *receiver* built from an older
+# checkout silently drops it (unknown-field skip, by design).  This
+# manifest makes that drift checkable: reprolint's ``wire-field-drift``
+# rule diffs it against the dataclass definitions statically, and
+# ``REPRO_SANITIZE=1`` re-checks at registry build time.  When you add a
+# dataclass field, add it HERE too (last, defaulted) — that is the review
+# speed-bump forcing the forward-compat question to be asked.
+WIRE_FIELDS = {
+    "Request": (
+        "rid", "prompt", "max_new_tokens", "priority", "arrival_s",
+        "deadline_s", "session", "sampling", "temperature", "out_tokens",
+        "done", "rejected", "finish_reason", "n_folded", "n_chunks",
+        "n_preempted", "n_migrated", "t_submit", "t_admit",
+        "t_first_token", "t_done",
+    ),
+    "SamplingParams": ("temperature", "top_k", "top_p", "seed"),
+    "RequestOutput": (
+        "rid", "token", "n_out", "finished", "finish_reason",
+        "ttft_s", "latency_s", "sched",
+    ),
+    "SlotSnapshot": (
+        "req", "slot_len", "last_token", "prefilling", "prefill_pos",
+        "pages", "ssm", "page_size", "family", "prefix_keys",
+    ),
+}
+
+
 # ----------------------------------------------------------------------
 # value codec
 # ----------------------------------------------------------------------
@@ -74,6 +103,11 @@ def _registry() -> dict[type, bytes]:
     if not _TAG_OF:
         _TYPE_OF.update(_serving_types())
         _TAG_OF.update({t: tag for tag, t in _TYPE_OF.items()})
+        from repro import _sanitize
+        san = _sanitize.load()
+        if san is not None:
+            san.check_wire_manifest(
+                WIRE_FIELDS, {t.__name__: t for t in _TAG_OF})
     return _TAG_OF
 
 

@@ -144,6 +144,7 @@ class Scheduler:
     # -- prefill pacing ----------------------------------------------------
     def prefill_budget(self, slot) -> int:
         """Prompt tokens this slot may prefill this engine step."""
+        # reprolint: ok boolean-select-trap — 0 and None both mean "no chunking" (chunk_spans rejects budget <= 0)
         return self.chunk_tokens or _NO_BUDGET
 
 
@@ -289,7 +290,8 @@ def _abs_deadline(req) -> float:
     """Absolute deadline on the arrival clock (inf = no SLO)."""
     if req.deadline_s is None:
         return _NO_DEADLINE
-    return (req.arrival_s or 0.0) + req.deadline_s
+    arrival = 0.0 if req.arrival_s is None else req.arrival_s
+    return arrival + req.deadline_s
 
 
 class EDFScheduler(Scheduler):

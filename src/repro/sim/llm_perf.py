@@ -10,7 +10,6 @@ appear as channel-idle phases that reads also fill.
 from __future__ import annotations
 
 import dataclasses
-import math
 
 from repro.configs.base import ModelConfig
 from repro.core import planner, tiling
@@ -86,7 +85,7 @@ def decode_token_time(cfg: ModelConfig, flash: FlashSpec,
     overlapped loop (``overlap_dispatch=True``, one fused dispatch enqueued
     while the previous step still computes) hides the gap behind compute —
     only ``max(0, gap - compute)`` of it can ever surface as latency."""
-    npu = npu or DEFAULT_NPU
+    npu = npu or DEFAULT_NPU  # reprolint: ok boolean-select-trap — npu is an NPUSpec or None, never numeric
     act_bytes = 1.0 if bytes_per_elem >= 1.0 else 2.0  # W4A16 -> 16-bit acts
     kv_b = int(act_bytes)
 

@@ -10,7 +10,6 @@ under ``kv_tier="flash"``).
 """
 
 import jax
-import numpy as np
 import pytest
 
 from repro.configs.registry import ASSIGNED_ARCHS

@@ -1,8 +1,5 @@
 """§V hardware-aware tiling: closed forms, AM-GM optimality, plan invariants."""
 
-import math
-
-import pytest
 
 try:
     from hypothesis import given, settings, strategies as st

@@ -1,0 +1,15 @@
+"""Correctness tooling for the repo's documented hazard classes.
+
+Two layers:
+
+* :mod:`tools.analysis.reprolint` — an AST-based static-analysis pass
+  (``python -m tools.analysis.reprolint src/ tests/``) whose rules encode
+  the bug classes this repo has already paid a debugging session for
+  (async host-buffer aliasing, raw-int Pallas indexing, ``x or 0`` traps,
+  donation use-after, wire-codec field drift, ...).
+* :mod:`tools.analysis.sanitize` — runtime invariant rails, enabled with
+  ``REPRO_SANITIZE=1``: a shadow-model page-allocator checker, an
+  overlapped-dispatch aliasing guard, and a jit retrace budget.
+
+See ``tools/analysis/README.md`` for the rule -> historical-bug catalogue.
+"""

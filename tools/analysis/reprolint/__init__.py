@@ -1,0 +1,209 @@
+"""reprolint — the repo's hazard classes as machine-checked lint rules.
+
+Cambricon-LLM-style serving hides latency by overlapping NPU compute with
+flash-channel traffic, and every overlap seam this repo has grown (async
+fused dispatch, lazy spill payloads, donated cache buffers, refcounted
+prefix pages, the fleet wire codec) has already produced one subtle bug
+that cost a debugging session.  Each rule here is one of those bug classes
+distilled to an AST pattern, so the class can never regress silently; the
+catalogue mapping rule -> historical bug lives in ``tools/analysis/README.md``.
+
+Usage::
+
+    python -m tools.analysis.reprolint src/ tests/
+    python -m tools.analysis.reprolint --list-rules
+    python -m tools.analysis.reprolint --select async-aliasing,jit-in-loop src/
+
+A finding can be allowlisted in place with a pragma comment on the same
+line or the line directly above, ideally with a one-line justification::
+
+    x = val or {}  # reprolint: ok boolean-select-trap — {} and None coincide
+
+Framework pieces:
+
+* :class:`Finding` — one diagnostic (``file:line [rule] message`` + hint).
+* :class:`Rule` — per-file AST rules (``check(src)``); set ``project =
+  True`` and implement ``check_project(files)`` for rules that need the
+  whole file set (e.g. ``wire-field-drift`` compares dataclasses against
+  the codec manifest across modules).
+* :func:`run` — collect files, run rules, filter pragma-suppressed
+  findings.  Importing :mod:`tools.analysis.reprolint.rules` registers the
+  built-in rules.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Iterable, Iterator
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One diagnostic, anchored to ``file:line``."""
+
+    file: str
+    line: int
+    rule: str
+    message: str
+    hint: str = ""
+
+    def render(self) -> str:
+        s = f"{self.file}:{self.line}: [{self.rule}] {self.message}"
+        if self.hint:
+            s += f"\n    hint: {self.hint}"
+        return s
+
+
+class SourceFile:
+    """One parsed python file: text, line list, AST, and a parent map
+    (child node -> parent node) built on first use."""
+
+    def __init__(self, path: str, text: str):
+        self.path = path
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text, filename=path)
+        self._parents: dict[ast.AST, ast.AST] | None = None
+
+    @property
+    def parents(self) -> dict[ast.AST, ast.AST]:
+        if self._parents is None:
+            self._parents = {
+                child: parent
+                for parent in ast.walk(self.tree)
+                for child in ast.iter_child_nodes(parent)
+            }
+        return self._parents
+
+
+class Rule:
+    """Base rule.  Subclasses set ``name`` / ``description`` / ``hint`` and
+    implement :meth:`check` (or :meth:`check_project` with ``project =
+    True``).  ``paths`` restricts a rule to files whose normalized path
+    contains one of the given fragments (e.g. the nondeterminism rule only
+    polices the serving/model hot paths)."""
+
+    name: str = ""
+    description: str = ""
+    hint: str = ""
+    paths: tuple[str, ...] = ()
+    project: bool = False
+
+    def applies_to(self, path: str) -> bool:
+        if not self.paths:
+            return True
+        norm = path.replace("\\", "/")
+        return any(frag in norm for frag in self.paths)
+
+    def check(self, src: SourceFile) -> Iterator[Finding]:
+        return iter(())
+
+    def check_project(self, files: dict[str, SourceFile]) -> Iterator[Finding]:
+        return iter(())
+
+
+REGISTRY: dict[str, Rule] = {}
+
+
+def register(cls: type[Rule]) -> type[Rule]:
+    rule = cls()
+    if not rule.name:
+        raise ValueError(f"rule {cls.__name__} has no name")
+    if rule.name in REGISTRY:
+        raise ValueError(f"duplicate rule name {rule.name!r}")
+    REGISTRY[rule.name] = rule
+    return cls
+
+
+# ----------------------------------------------------------------------
+# pragma allowlist: "# reprolint: ok <rule>[, <rule>...] [— justification]"
+# ----------------------------------------------------------------------
+PRAGMA_RE = re.compile(r"#\s*reprolint:\s*ok\s+([\w\-*,\s]+)")
+
+
+def _pragma_rules(line_text: str) -> set[str]:
+    m = PRAGMA_RE.search(line_text)
+    if not m:
+        return set()
+    return {tok.strip() for tok in re.split(r"[,\s]+", m.group(1)) if tok.strip()}
+
+
+def suppressed(src: SourceFile, finding: Finding) -> bool:
+    """A finding is allowlisted by a pragma on its line or the line above."""
+    for lineno in (finding.line, finding.line - 1):
+        if 1 <= lineno <= len(src.lines):
+            rules = _pragma_rules(src.lines[lineno - 1])
+            if finding.rule in rules or "*" in rules:
+                return True
+    return False
+
+
+# ----------------------------------------------------------------------
+# driver
+# ----------------------------------------------------------------------
+_SKIP_DIRS = {"__pycache__", ".git", ".ruff_cache", ".pytest_cache", "build",
+              "dist", ".eggs", "node_modules"}
+
+
+def collect_files(paths: Iterable[str]) -> list[str]:
+    out: list[str] = []
+    for p in paths:
+        path = Path(p)
+        if path.is_file() and path.suffix == ".py":
+            out.append(str(path))
+        elif path.is_dir():
+            for f in sorted(path.rglob("*.py")):
+                if not any(part in _SKIP_DIRS or part.startswith(".")
+                           for part in f.parts):
+                    out.append(str(f))
+    # dedup, stable order
+    seen: set[str] = set()
+    uniq = []
+    for f in out:
+        if f not in seen:
+            seen.add(f)
+            uniq.append(f)
+    return uniq
+
+
+def load_rules() -> dict[str, Rule]:
+    """Import the built-in rule set (registration happens at import)."""
+    from tools.analysis.reprolint import rules as _rules  # noqa: F401
+    return REGISTRY
+
+
+def run(paths: Iterable[str], select: Iterable[str] | None = None,
+        ) -> tuple[list[Finding], list[str]]:
+    """Lint ``paths``; returns ``(findings, errors)`` where ``errors`` are
+    files that failed to parse (a syntax error is reported, not swallowed)."""
+    rules = load_rules()
+    if select:
+        unknown = set(select) - set(rules)
+        if unknown:
+            raise ValueError(f"unknown rules: {sorted(unknown)}; "
+                             f"available: {sorted(rules)}")
+        rules = {n: r for n, r in rules.items() if n in select}
+    files: dict[str, SourceFile] = {}
+    errors: list[str] = []
+    for path in collect_files(paths):
+        try:
+            text = Path(path).read_text()
+            files[path] = SourceFile(path, text)
+        except (SyntaxError, UnicodeDecodeError) as e:
+            errors.append(f"{path}: {e}")
+    findings: list[Finding] = []
+    for rule in rules.values():
+        if rule.project:
+            findings.extend(rule.check_project(
+                {p: s for p, s in files.items() if rule.applies_to(p)}))
+        else:
+            for path, src in files.items():
+                if rule.applies_to(path):
+                    findings.extend(rule.check(src))
+    kept = [f for f in findings
+            if f.file not in files or not suppressed(files[f.file], f)]
+    kept.sort(key=lambda f: (f.file, f.line, f.rule))
+    return kept, errors

@@ -1,0 +1,54 @@
+"""CLI driver: ``python -m tools.analysis.reprolint [paths...]``.
+
+Exit status: 0 clean, 1 findings (or parse errors), 2 usage error.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from collections import Counter
+
+from tools.analysis.reprolint import load_rules, run
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.analysis.reprolint",
+        description="repo-specific hazard-class lint (see "
+                    "tools/analysis/README.md)")
+    ap.add_argument("paths", nargs="*", default=["src", "tests"],
+                    help="files/directories to lint (default: src tests)")
+    ap.add_argument("--select", default="",
+                    help="comma-separated rule names to run (default: all)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    args = ap.parse_args(argv)
+
+    rules = load_rules()
+    if args.list_rules:
+        for name in sorted(rules):
+            print(f"{name:22s} {rules[name].description}")
+        return 0
+
+    select = [s.strip() for s in args.select.split(",") if s.strip()] or None
+    try:
+        findings, errors = run(args.paths or ["src", "tests"], select=select)
+    except ValueError as e:
+        print(f"reprolint: {e}", file=sys.stderr)
+        return 2
+    for err in errors:
+        print(f"parse error: {err}", file=sys.stderr)
+    for f in findings:
+        print(f.render())
+    if findings:
+        counts = Counter(f.rule for f in findings)
+        summary = ", ".join(f"{r}={n}" for r, n in sorted(counts.items()))
+        print(f"\nreprolint: {len(findings)} finding(s) [{summary}]")
+    else:
+        print("reprolint: clean")
+    return 1 if (findings or errors) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,424 @@
+"""Runtime invariant rails ("sanitizers") for the serving stack.
+
+Enabled with ``REPRO_SANITIZE=1`` (see ``src/repro/_sanitize.py`` for the
+import bridge the serving hooks use).  Three rails, each the runtime twin
+of a reprolint rule / documented hazard class:
+
+* **Shadow-model allocator checker** — every ``alloc`` / ``free`` /
+  ``incref`` / ``decref`` on a ``PageAllocator`` (and every ``store`` /
+  ``fetch`` / ``mark_evictable`` / ``pop_evictable`` on the tiered cold
+  store — the spill/prefetch ops) is mirrored against an independent
+  pure-python model and cross-checked against the real allocator's
+  observable state.  Divergence (double-alloc of a live page, free while
+  shared, a page simultaneously eviction-marked hot AND stored cold)
+  raises :class:`SanitizerError` with the trailing op log, at the op that
+  corrupted the pool rather than N tokens later.
+
+* **Overlapped-dispatch aliasing guard** — the numpy args handed to the
+  fused decode+sample dispatch are hashed at dispatch and re-hashed at the
+  lagged drain.  A mismatch is the PR 6 host-buffer race (CPU jit aliases
+  numpy inputs zero-copy; the host mutated a buffer while the async step
+  still read it), caught at the step that corrupted it.
+
+* **Jit retrace budget** — the fused-step trace-cache size is asserted
+  against a budget each drain, so a shape-bucketing regression (retrace
+  per step instead of per bucket) fails loudly instead of slowly.
+
+All checks raise; ``report_count()`` stays 0 on a healthy run and
+``check_count()`` proves the rails actually executed (the bench smoke
+asserts both).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+from collections import deque
+
+__all__ = [
+    "SanitizerError", "enabled", "report_count", "check_count",
+    "reset_counters", "attach_page_shadow", "attach_tier_shadow",
+    "guard_dispatch", "check_drain", "check_retrace",
+    "check_wire_manifest",
+]
+
+
+class SanitizerError(AssertionError):
+    """An invariant the sanitizer rails pin was violated."""
+
+
+_reports = 0
+_checks = 0
+
+
+def enabled() -> bool:
+    return os.environ.get("REPRO_SANITIZE", "") not in ("", "0")
+
+
+def report_count() -> int:
+    """Violations raised so far (0 on a healthy run)."""
+    return _reports
+
+
+def check_count() -> int:
+    """Invariant checks executed so far (> 0 proves the rails ran)."""
+    return _checks
+
+
+def reset_counters() -> None:
+    global _reports, _checks
+    _reports = _checks = 0
+
+
+def _checked() -> None:
+    global _checks
+    _checks += 1
+
+
+def _violation(msg: str, trail=None):
+    global _reports
+    _reports += 1
+    if trail:
+        msg += "\n  op trail (oldest first):\n" + "\n".join(
+            f"    {op}" for op in trail)
+    raise SanitizerError(msg)
+
+
+# ----------------------------------------------------------------------
+# shadow-model page allocator
+# ----------------------------------------------------------------------
+class ShadowPageModel:
+    """Independent pure-python model of ``PageAllocator`` semantics: a free
+    set plus per-page refcounts.  Deliberately re-derives every rule from
+    the documented contract (page 0 reserved; alloc hands out refcount 1;
+    refcount 0 = allocated-but-idle; free requires refcount <= 1) instead
+    of reusing the allocator's own bookkeeping — agreement is the check."""
+
+    def __init__(self, num_pages: int):
+        self.num_pages = num_pages
+        self.free: set[int] = set(range(1, num_pages))
+        self.refs: dict[int, int] = {}
+
+    def on_alloc(self, pids, trail):
+        for p in pids:
+            if p in self.refs:
+                _violation(
+                    f"shadow allocator: page {p} allocated while already "
+                    f"live (refcount {self.refs[p]}) — two slots now write "
+                    f"the same KV page", trail)
+            if p not in self.free:
+                _violation(
+                    f"shadow allocator: page {p} allocated but the model "
+                    f"does not have it free (reserved/out-of-range id?)",
+                    trail)
+            self.free.discard(p)
+            self.refs[p] = 1
+
+    def on_free(self, pids, trail):
+        seen = set()
+        for p in pids:
+            if p in self.free or p in seen:
+                _violation(
+                    f"shadow allocator: page {p} double-freed — its id "
+                    f"would be handed to two slots and corrupt both "
+                    f"KV streams", trail)
+            if p not in self.refs:
+                _violation(
+                    f"shadow allocator: page {p} freed but never allocated",
+                    trail)
+            if self.refs[p] > 1:
+                _violation(
+                    f"shadow allocator: page {p} freed while shared "
+                    f"(refcount {self.refs[p]}) — the surviving sharers "
+                    f"now read a recycled page", trail)
+            seen.add(p)
+        for p in pids:
+            self.refs.pop(p, None)
+            self.free.add(p)
+
+    def on_incref(self, pid, result, trail):
+        if pid not in self.refs:
+            _violation(
+                f"shadow allocator: incref of unallocated page {pid}", trail)
+        self.refs[pid] += 1
+        if result != self.refs[pid]:
+            _violation(
+                f"shadow allocator: incref({pid}) returned {result}, model "
+                f"says {self.refs[pid]}", trail)
+
+    def on_decref(self, pid, result, trail):
+        if self.refs.get(pid, 0) <= 0:
+            _violation(
+                f"shadow allocator: decref of page {pid} below zero", trail)
+        self.refs[pid] -= 1
+        if result != self.refs[pid]:
+            _violation(
+                f"shadow allocator: decref({pid}) returned {result}, model "
+                f"says {self.refs[pid]}", trail)
+
+
+def _cross_check(palloc, model: ShadowPageModel, trail, touched=()):
+    """Compare the real allocator's observable state with the model."""
+    _checked()
+    if palloc.available != len(model.free):
+        _violation(
+            f"shadow allocator: real free count {palloc.available} != "
+            f"model {len(model.free)} — the pool and its bookkeeping have "
+            f"diverged", trail)
+    for p in touched:
+        real = palloc._refs.get(p)
+        want = model.refs.get(p)
+        if real != want:
+            _violation(
+                f"shadow allocator: page {p} refcount {real} != model "
+                f"{want}", trail)
+
+
+def attach_page_shadow(palloc):
+    """Wrap a ``PageAllocator`` instance's mutating ops so each one is
+    mirrored into a :class:`ShadowPageModel` and cross-checked.  The model
+    and trail ride on the instance (``_shadow`` / ``_shadow_trail``)."""
+    model = ShadowPageModel(palloc.num_pages)
+    trail: deque = deque(maxlen=64)
+    real_alloc, real_free = palloc.alloc, palloc.free
+    real_incref, real_decref = palloc.incref, palloc.decref
+
+    def alloc(n=1):
+        pids = real_alloc(n)
+        trail.append(f"alloc({n}) -> {pids}")
+        model.on_alloc(pids, trail)
+        _cross_check(palloc, model, trail, pids)
+        return pids
+
+    def free(pids):
+        real_free(pids)
+        trail.append(f"free({list(pids)})")
+        model.on_free(pids, trail)
+        _cross_check(palloc, model, trail)
+
+    def incref(pid):
+        n = real_incref(pid)
+        trail.append(f"incref({pid}) -> {n}")
+        model.on_incref(pid, n, trail)
+        _cross_check(palloc, model, trail, (pid,))
+        return n
+
+    def decref(pid):
+        n = real_decref(pid)
+        trail.append(f"decref({pid}) -> {n}")
+        model.on_decref(pid, n, trail)
+        _cross_check(palloc, model, trail, (pid,))
+        return n
+
+    palloc.alloc, palloc.free = alloc, free
+    palloc.incref, palloc.decref = incref, decref
+    palloc._shadow = model
+    palloc._shadow_trail = trail
+    return model
+
+
+class ShadowTierModel:
+    """Model of the tiered residency rules: a key is cold XOR
+    eviction-marked XOR neither — never both — and the cold tier respects
+    its bound.  ``store`` over a still-eviction-marked key is the
+    hot+cold violation the real allocator does not guard itself."""
+
+    def __init__(self, flash_pages):
+        self.flash_pages = flash_pages
+        self.cold: set = set()
+        self.evictable: dict = {}
+
+    def on_mark_evictable(self, key, pid, trail):
+        if key in self.cold:
+            _violation(
+                f"shadow tier: page {key!r} eviction-marked while already "
+                f"cold (hot+cold residency)", trail)
+        if key in self.evictable:
+            _violation(
+                f"shadow tier: page {key!r} eviction-marked twice", trail)
+        self.evictable[key] = pid
+
+    def on_store(self, key, trail):
+        if key in self.evictable:
+            _violation(
+                f"shadow tier: page {key!r} stored cold while still "
+                f"eviction-marked hot — the same page now has two live "
+                f"residencies (hot+cold)", trail)
+        if key in self.cold:
+            _violation(f"shadow tier: page {key!r} stored cold twice", trail)
+        if (self.flash_pages is not None
+                and len(self.cold) >= self.flash_pages):
+            _violation(
+                f"shadow tier: cold store past the flash bound "
+                f"({self.flash_pages} pages)", trail)
+        self.cold.add(key)
+
+    def on_fetch(self, key, trail):
+        if key not in self.cold:
+            _violation(
+                f"shadow tier: fetch of page {key!r} that is not cold "
+                f"(lost or double-prefetched payload)", trail)
+        self.cold.discard(key)
+
+    def on_pop_evictable(self, popped, trail):
+        for key, _pid in popped:
+            if key not in self.evictable:
+                _violation(
+                    f"shadow tier: pop_evictable returned {key!r} which "
+                    f"was never eviction-marked", trail)
+            del self.evictable[key]
+
+
+def attach_tier_shadow(talloc):
+    """Wrap a ``TieredPageAllocator``'s residency ops (its hot
+    ``PageAllocator`` is expected to carry its own page shadow)."""
+    model = ShadowTierModel(talloc.flash_pages)
+    trail: deque = deque(maxlen=64)
+    real = {name: getattr(talloc, name) for name in
+            ("mark_evictable", "pop_evictable", "store", "fetch",
+             "unmark_slot", "drop_slot")}
+
+    def _cross():
+        _checked()
+        if len(talloc._cold) != len(model.cold):
+            _violation(
+                f"shadow tier: real cold count {len(talloc._cold)} != "
+                f"model {len(model.cold)}", trail)
+        if len(talloc._evictable) != len(model.evictable):
+            _violation(
+                f"shadow tier: real evictable count "
+                f"{len(talloc._evictable)} != model {len(model.evictable)}",
+                trail)
+
+    def mark_evictable(key, pid):
+        real["mark_evictable"](key, pid)
+        trail.append(f"mark_evictable({key!r}, {pid})")
+        model.on_mark_evictable(key, pid, trail)
+        _cross()
+
+    def pop_evictable(n, exclude=None):
+        out = real["pop_evictable"](n, exclude)
+        trail.append(f"pop_evictable({n}) -> {[k for k, _ in out]}")
+        model.on_pop_evictable(out, trail)
+        _cross()
+        return out
+
+    def store(key, payload):
+        trail.append(f"store({key!r})")
+        model.on_store(key, trail)  # checked FIRST: real impl accepts it
+        real["store"](key, payload)
+        _cross()
+
+    def fetch(key):
+        payload = real["fetch"](key)
+        trail.append(f"fetch({key!r})")
+        model.on_fetch(key, trail)
+        _cross()
+        return payload
+
+    def unmark_slot(match):
+        real["unmark_slot"](match)
+        trail.append("unmark_slot(<match>)")
+        for k in [k for k in model.evictable if match(k)]:
+            del model.evictable[k]
+        _cross()
+
+    def drop_slot(match):
+        real["drop_slot"](match)
+        trail.append("drop_slot(<match>)")
+        for k in [k for k in model.cold if match(k)]:
+            model.cold.discard(k)
+        for k in [k for k in model.evictable if match(k)]:
+            del model.evictable[k]
+        _cross()
+
+    talloc.mark_evictable = mark_evictable
+    talloc.pop_evictable = pop_evictable
+    talloc.store, talloc.fetch = store, fetch
+    talloc.unmark_slot, talloc.drop_slot = unmark_slot, drop_slot
+    talloc._tier_shadow = model
+    talloc._tier_shadow_trail = trail
+    return model
+
+
+# ----------------------------------------------------------------------
+# overlapped-dispatch aliasing guard
+# ----------------------------------------------------------------------
+def _digest(arr) -> str:
+    return hashlib.sha256(arr.tobytes()).hexdigest()
+
+
+class DispatchGuard:
+    """Hashes of the host numpy buffers handed to one overlapped dispatch;
+    re-checked at the lagged drain of that same step."""
+
+    __slots__ = ("step", "entries")
+
+    def __init__(self, step: int, named_arrays: dict):
+        self.step = step
+        self.entries = [(name, arr, _digest(arr))
+                        for name, arr in named_arrays.items()
+                        if arr is not None]
+
+
+def guard_dispatch(step: int, **named_arrays) -> DispatchGuard:
+    """Snapshot hashes of the numpy args at dispatch time."""
+    return DispatchGuard(step, named_arrays)
+
+
+def check_drain(guard: DispatchGuard) -> None:
+    """Re-hash at drain; any mutation in between is the PR 6 aliasing race
+    — the async step read the buffer while the host wrote it."""
+    _checked()
+    for name, arr, digest in guard.entries:
+        if _digest(arr) != digest:
+            _violation(
+                f"aliasing guard: dispatch arg `{name}` of decode step "
+                f"{guard.step} was mutated between dispatch and drain — "
+                f"the overlapped step read it concurrently (pass a .copy() "
+                f"snapshot at dispatch)")
+
+
+# ----------------------------------------------------------------------
+# jit retrace budget
+# ----------------------------------------------------------------------
+def check_retrace(fn, label: str, budget: int | None = None) -> None:
+    """Assert ``fn``'s trace-cache size stays within the budget.  The
+    fused step should trace once per (shape bucket, greedy flag) — a
+    cache that grows with the step count is a retrace explosion."""
+    if budget is None:
+        budget = int(os.environ.get("REPRO_SANITIZE_RETRACE_BUDGET", "16"))
+    size_fn = getattr(fn, "_cache_size", None)
+    if size_fn is None:
+        return  # older jax: no introspection surface
+    _checked()
+    n = size_fn()
+    if n > budget:
+        _violation(
+            f"retrace budget: {label} has {n} cached traces "
+            f"(budget {budget}) — a dynamic shape/static-arg is leaking "
+            f"into the trace key (see the jit-in-loop lint rule)")
+
+
+# ----------------------------------------------------------------------
+# wire manifest (runtime twin of the wire-field-drift lint rule)
+# ----------------------------------------------------------------------
+def check_wire_manifest(manifest: dict, classes: dict) -> None:
+    """``manifest``: name -> tuple of covered field names;``classes``:
+    name -> dataclass type.  Raises on drift in either direction."""
+    import dataclasses as _dc
+    _checked()
+    for name, cls in classes.items():
+        listed = set(manifest.get(name, ()))
+        actual = {f.name for f in _dc.fields(cls)}
+        missing = actual - listed
+        stale = listed - actual
+        if missing:
+            _violation(
+                f"wire manifest: {name} field(s) {sorted(missing)} not "
+                f"covered by WIRE_FIELDS — they would silently drop on "
+                f"the fleet wire")
+        if stale:
+            _violation(
+                f"wire manifest: WIRE_FIELDS lists {name} field(s) "
+                f"{sorted(stale)} that the dataclass no longer has")
